@@ -1,0 +1,54 @@
+"""Shared benchmark harness utilities (Track-A paper-table reproductions).
+
+Budgets are scaled for the CPU container; every benchmark prints
+``name,us_per_call,derived`` CSV rows (us_per_call = wall μs per FL round)
+and saves the full result JSON under experiments/bench/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.core.caesar import CaesarConfig
+from repro.fl.simulation import History, SimConfig, Simulator
+
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+FAST = dict(n_clients=30, participation=0.2, data_scale=0.05, eval_every=2)
+TAUS = {"har": 5, "cifar10": 10, "speech": 10, "oppo_ts": 10}
+ROUNDS = {"har": 30, "cifar10": 30, "speech": 24, "oppo_ts": 24}
+BMAX = {"har": 16, "cifar10": 32, "speech": 32, "oppo_ts": 32}
+
+
+def sim_config(dataset: str, scheme: str, rounds: int | None = None,
+               caesar_kw: dict | None = None, **kw) -> SimConfig:
+    c = CaesarConfig(tau=TAUS[dataset], b_max=BMAX[dataset],
+                     **(caesar_kw or {}))
+    base = dict(FAST)
+    base.update(kw)
+    return SimConfig(dataset=dataset, scheme=scheme,
+                     rounds=rounds or ROUNDS[dataset], caesar=c, **base)
+
+
+def run_sim(cfg: SimConfig, log=lambda s: None) -> tuple[History, float]:
+    t0 = time.time()
+    h = Simulator(cfg).run(log=log)
+    wall = time.time() - t0
+    return h, wall
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.0f},{derived}")
+
+
+def save(name: str, payload):
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=float))
+
+
+def highest_common_accuracy(histories: dict[str, History]) -> float:
+    """Paper Table 3 convention: target = highest accuracy ALL schemes reach."""
+    return min(max(h.accuracy) for h in histories.values())

@@ -1,0 +1,29 @@
+"""Paper Fig. 10 / §6.5: scalability across device counts (scaled for CPU)."""
+from __future__ import annotations
+
+from benchmarks import common as CM
+
+SCALES = [30, 60, 100]
+SCHEMES = ["fedavg", "caesar"]
+
+
+def run(dataset="har", log=lambda s: None):
+    out = {}
+    for n in SCALES:
+        for scheme in SCHEMES:
+            cfg = CM.sim_config(dataset, scheme, n_clients=n,
+                                participation=max(0.1, 6 / n))
+            h, wall = CM.run_sim(cfg, log)
+            out[f"{scheme}@n{n}"] = {
+                "final_acc": h.accuracy[-1],
+                "traffic_gb": h.traffic_bits[-1] / 8e9,
+                "time_s": h.sim_time[-1]}
+            CM.csv_row(f"fig10/{scheme}/n{n}",
+                       wall / max(len(h.rounds), 1) * 1e6,
+                       f"acc={h.accuracy[-1]:.3f};traffic_gb={h.traffic_bits[-1]/8e9:.3f};time_s={h.sim_time[-1]:.0f}")
+    CM.save("fig10_scales", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(log=print)

@@ -1,0 +1,24 @@
+"""Paper Fig. 7: average synchronous-barrier waiting time per scheme."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+
+SCHEMES = ["fedavg", "flexcom", "prowd", "pyramidfl", "caesar"]
+
+
+def run(dataset="har", log=lambda s: None):
+    out = {}
+    for scheme in SCHEMES:
+        h, wall = CM.run_sim(CM.sim_config(dataset, scheme), log)
+        w = float(np.mean(h.waiting))
+        out[scheme] = w
+        CM.csv_row(f"fig7/{scheme}", wall / max(len(h.rounds), 1) * 1e6,
+                   f"avg_wait_s={w:.2f}")
+    CM.save("fig7_waiting", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(log=print)

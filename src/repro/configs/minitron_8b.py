@@ -1,0 +1,11 @@
+"""Minitron-8B [arXiv:2407.14679; hf]: width-pruned Nemotron-4.
+
+Assignment: 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=16384, vocab=256000,
+)

@@ -1,0 +1,97 @@
+"""Caesar round orchestration: ties Eq. 3/5/6/9 into a per-round plan.
+
+This module is policy-only (no model math): given the persistent CaesarState
+and this round's participant set + capability snapshot, produce the per-device
+download ratio, upload ratio, and batch size. Both tracks (fl/simulation.py
+and fl/distributed.py) consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batchsize as bs
+from repro.core import importance as imp
+from repro.core import staleness as st
+
+
+@dataclasses.dataclass(frozen=True)
+class CaesarConfig:
+    theta_d_max: float = 0.6      # download-ratio upper bound (paper range [0.1,0.6])
+    theta_u_min: float = 0.1
+    theta_u_max: float = 0.6
+    lam: float = 0.5              # Eq. 5 λ
+    n_clusters: int = 8           # §4.1 cluster-based grouping (0 = per-device)
+    b_max: int = 32               # paper default batch size as the cap
+    b_min: int = 1
+    tau: int = 30                 # local iterations (paper: 30 / 10 for HAR)
+    use_error_feedback: bool = False   # beyond-paper toggle (off = faithful)
+    use_batch_opt: bool = True         # §4.3 on/off (off = Caesar-DC ablation)
+    use_deviation_compress: bool = True  # §4.1+4.2 on/off (off = Caesar-BR)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CaesarState:
+    last_round: jax.Array     # [n] int32, r_i (0 = never participated)
+    importance: jax.Array     # [n] f32, C_i (static, computed pre-training)
+    upload_ratio: jax.Array   # [n] f32, θ_u,i (static rank-based, Eq. 6)
+
+
+def init_state(volumes: jax.Array, label_dist: jax.Array,
+               cfg: CaesarConfig) -> CaesarState:
+    """Algorithm 1 lines 2–4: rank devices by importance before training."""
+    n = volumes.shape[0]
+    c = imp.importance(volumes, label_dist, cfg.lam)
+    theta_u = imp.upload_ratio(c, cfg.theta_u_min, cfg.theta_u_max)
+    return CaesarState(last_round=jnp.zeros(n, jnp.int32),
+                       importance=c, upload_ratio=theta_u)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundPlan:
+    theta_d: jax.Array        # [n] f32 download ratios (Eq. 3, clustered)
+    theta_u: jax.Array        # [n] f32 upload ratios (Eq. 6)
+    batch: jax.Array          # [n] int32 batch sizes (Eq. 9)
+    cluster_id: jax.Array     # [n] int32 (download-compression grouping)
+
+
+def plan_round(state: CaesarState, t: jax.Array, cfg: CaesarConfig,
+               bw_down: jax.Array, bw_up: jax.Array, mu: jax.Array,
+               q_bits: float) -> RoundPlan:
+    """Algorithm 1 lines 8–10 for all devices (callers mask to participants)."""
+    delta = st.staleness(state.last_round, t)
+    if cfg.use_deviation_compress:
+        if cfg.n_clusters > 0:
+            cid, theta_d = st.cluster_ratios(delta, t, cfg.theta_d_max,
+                                             cfg.n_clusters)
+        else:
+            theta_d = st.download_ratio(delta, t, cfg.theta_d_max)
+            cid = jnp.arange(delta.shape[0], dtype=jnp.int32)
+        theta_u = state.upload_ratio
+    else:  # Caesar-BR ablation: fixed mid-range ratios for everyone
+        mid = 0.5 * (cfg.theta_u_min + cfg.theta_u_max)
+        theta_d = jnp.full_like(state.importance, mid)
+        theta_u = jnp.full_like(state.importance, mid)
+        cid = jnp.zeros(delta.shape[0], jnp.int32)
+
+    if cfg.use_batch_opt:
+        batch, _ = bs.optimize_batch_sizes(theta_d, theta_u, q_bits, bw_down,
+                                           bw_up, cfg.tau, mu, cfg.b_max,
+                                           cfg.b_min)
+    else:  # Caesar-DC ablation: identical fixed batch size
+        batch = jnp.full(delta.shape[0], cfg.b_max, jnp.int32)
+    return RoundPlan(theta_d=theta_d, theta_u=theta_u, batch=batch,
+                     cluster_id=cid)
+
+
+def post_round(state: CaesarState, participants: jax.Array,
+               t: jax.Array) -> CaesarState:
+    """Update participation records after aggregation."""
+    return dataclasses.replace(
+        state, last_round=st.update_participation(state.last_round,
+                                                  participants, t))

@@ -1,0 +1,191 @@
+"""Caesar's hybrid compression operator (paper §4.1 Fig. 3) and top-k transport.
+
+All operators are pure-jnp, jit-able, and shape-static. "Compression" in the
+simulator is *semantic*: the deviation (information loss) is applied exactly as
+the wire format would, and the wire size is accounted analytically in bytes
+(`payload_bits`). On the datacenter track the payload reduction is realized as
+reduced-precision/reduced-cardinality collectives (see fl/distributed.py).
+
+Conventions
+-----------
+ratio θ ∈ [0, 1] is the *compressed fraction*: the θ·n smallest-magnitude
+elements are degraded (1-bit signs for model download; zeroed for gradient
+upload top-k), the (1−θ)·n largest stay full precision. θ=0 ⇒ lossless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+FULL_BITS = 32          # full-precision element width (paper transmits fp32)
+SIGN_BITS = 1           # 1-bit sign for compressed elements
+STAT_BITS = 2 * 32      # (mean_abs, max_abs) scalars per tensor
+INDEX_BITS = 32         # index cost per surviving top-k element (upload path)
+
+
+# ---------------------------------------------------------------------------
+# Threshold selection (the TPU-native form of Top-K: see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def magnitude_threshold(x: jax.Array, ratio: jax.Array) -> jax.Array:
+    """|x| value below which elements fall into the compressed set.
+
+    ``ratio`` is the fraction of elements to compress (smallest magnitudes).
+    Exact quantile — O(n log n); fine at simulator scale. The Pallas
+    histogram kernel (kernels/topk_threshold.py) is the O(n) large-tensor path.
+    """
+    mag = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+    q = jnp.clip(ratio, 0.0, 1.0)
+    return jnp.quantile(mag, q)
+
+
+def compress_mask(x: jax.Array, ratio: jax.Array) -> jax.Array:
+    """Boolean mask, True where the element is in the *compressed* (small) set."""
+    thr = magnitude_threshold(x, ratio)
+    # Strict < keeps at least the max element full-precision even at ratio→1,
+    # and makes ratio=0 (thr = min|x|) compress nothing when all magnitudes differ.
+    return jnp.abs(x) < thr
+
+
+# ---------------------------------------------------------------------------
+# Download path: hybrid Top-K + 1-bit (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridCompressed:
+    """Semantic form of the Fig.-3 wire format for one tensor."""
+    kept: jax.Array       # x where full-precision, 0 where compressed
+    sign: jax.Array       # int8 sign (+1/-1) where compressed, 0 where kept
+    mean_abs: jax.Array   # scalar f32: mean |x| over compressed set
+    max_abs: jax.Array    # scalar f32: max |x| over compressed set
+    mask: jax.Array       # bool: True where compressed (transmitted as positions
+                          # implicit in the sparse wire format)
+
+    def payload_bits(self) -> jax.Array:
+        n_comp = jnp.sum(self.mask)
+        n_keep = self.mask.size - n_comp
+        return n_keep * FULL_BITS + n_comp * SIGN_BITS + STAT_BITS
+
+
+def hybrid_compress(x: jax.Array, ratio: jax.Array) -> HybridCompressed:
+    """Compress: θ smallest-|x| elements → 1-bit sign + (mean,max) stats."""
+    mask = compress_mask(x, ratio)
+    absx = jnp.abs(x)
+    n = jnp.maximum(jnp.sum(mask), 1)
+    mean_abs = jnp.sum(jnp.where(mask, absx, 0.0)) / n
+    max_abs = jnp.max(jnp.where(mask, absx, 0.0))
+    sign = jnp.where(mask, jnp.sign(x), 0.0).astype(jnp.int8)
+    kept = jnp.where(mask, 0.0, x).astype(x.dtype)
+    return HybridCompressed(kept=kept, sign=sign,
+                            mean_abs=mean_abs.astype(jnp.float32),
+                            max_abs=max_abs.astype(jnp.float32), mask=mask)
+
+
+def hybrid_recover(c: HybridCompressed, local: jax.Array) -> jax.Array:
+    """Fig. 3 recovery using the receiver's stale ``local`` tensor.
+
+    For compressed slots: use the local parameter, unless
+      (1) its sign contradicts the transmitted sign bit, or
+      (2) its magnitude exceeds the transmitted max_abs,
+    in which case reconstruct as sign·mean_abs.
+    """
+    sgn = c.sign.astype(local.dtype)
+    # sign()==0 for local zeros: a zero local param neither agrees nor exceeds;
+    # paper's rule (1) fires on contradiction — treat 0 as agreeing (no info).
+    sign_bad = jnp.sign(local) * sgn < 0
+    mag_bad = jnp.abs(local) > c.max_abs
+    fallback = sgn * c.mean_abs.astype(local.dtype)
+    approx = jnp.where(sign_bad | mag_bad, fallback, local)
+    return jnp.where(c.mask, approx, c.kept.astype(local.dtype))
+
+
+def hybrid_roundtrip(x: jax.Array, local: jax.Array,
+                     ratio: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """compress→recover in one call. Returns (recovered, payload_bits)."""
+    c = hybrid_compress(x, ratio)
+    return hybrid_recover(c, local), c.payload_bits()
+
+
+# ---------------------------------------------------------------------------
+# Upload path: Top-K sparsification (values kept exactly, rest dropped)
+# ---------------------------------------------------------------------------
+
+def topk_sparsify(g: jax.Array, ratio: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Zero the θ smallest-|g| elements. Returns (sparse_g, payload_bits).
+
+    Wire format: (index, fp32 value) per survivor — standard sparse encoding,
+    matching the paper's Top-K traffic accounting.
+    """
+    mask = compress_mask(g, ratio)  # True = dropped
+    sparse = jnp.where(mask, 0.0, g).astype(g.dtype)
+    n_keep = g.size - jnp.sum(mask)
+    bits = n_keep * (FULL_BITS + INDEX_BITS)
+    return sparse, bits
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level wrappers (operate on whole model pytrees with one global ratio)
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: Pytree) -> tuple[jax.Array, Any, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, treedef, leaves
+
+
+def _unflatten(flat: jax.Array, treedef, leaves) -> Pytree:
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_hybrid_roundtrip(tree: Pytree, local_tree: Pytree,
+                          ratio: jax.Array) -> tuple[Pytree, jax.Array]:
+    """Whole-model download compression with a single global threshold.
+
+    Flattening to one vector matches the paper (the ratio is a property of the
+    whole model payload, not per-layer).
+    """
+    flat, treedef, leaves = _flatten(tree)
+    lflat, _, _ = _flatten(local_tree)
+    rec, bits = hybrid_roundtrip(flat, lflat, ratio)
+    return _unflatten(rec, treedef, leaves), bits
+
+
+def tree_topk_sparsify(tree: Pytree, ratio: jax.Array) -> tuple[Pytree, jax.Array]:
+    flat, treedef, leaves = _flatten(tree)
+    sparse, bits = topk_sparsify(flat, ratio)
+    return _unflatten(sparse, treedef, leaves), bits
+
+
+def tree_payload_bits_dense(tree: Pytree) -> int:
+    """Uncompressed fp32 payload of a pytree, in bits."""
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree)) * FULL_BITS
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (beyond-paper; classic EF for sparsified SGD).
+# Caesar itself drops the compressed-away residual; EF accumulates it locally
+# and re-injects next round — strictly improves convergence under top-k and is
+# toggleable so the paper-faithful baseline stays intact.
+# ---------------------------------------------------------------------------
+
+def ef_compress(g: Pytree, ef: Pytree, ratio: jax.Array,
+                enabled: bool = True) -> tuple[Pytree, Pytree, jax.Array]:
+    """Error-feedback top-k: compress (g + ef), stash the residual back in ef."""
+    if not enabled:
+        sparse, bits = tree_topk_sparsify(g, ratio)
+        return sparse, ef, bits
+    corrected = jax.tree.map(lambda a, b: a + b, g, ef)
+    sparse, bits = tree_topk_sparsify(corrected, ratio)
+    new_ef = jax.tree.map(lambda c, s: c - s, corrected, sparse)
+    return sparse, new_ef, bits

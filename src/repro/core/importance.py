@@ -1,0 +1,41 @@
+"""Importance-aware upload compression (paper §4.2, Eqs. 4–6).
+
+Importance is computed once before training from static data properties
+(sample volume + label distribution); the PS ranks devices and assigns upload
+ratios by rank. Rank 1 (most important) gets θ_u ≈ θ_min; the least important
+gets ≈ θ_max, matching Eq. 6 with Rank(C_i) ∈ {0, …, |N|−1} ascending in
+*descending* importance order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kl_to_uniform(label_dist: jax.Array) -> jax.Array:
+    """Eq. 4: D_i = KL(Φ_i ‖ uniform) per device. label_dist: [n, H], rows sum 1."""
+    h = label_dist.shape[-1]
+    e = jnp.clip(label_dist, 1e-12, 1.0)
+    return jnp.sum(e * jnp.log(e * h), axis=-1)
+
+
+def importance(volumes: jax.Array, label_dist: jax.Array,
+               lam: float = 0.5, a_max: jax.Array | None = None) -> jax.Array:
+    """Eq. 5: C_i = λ·A_i/A_max + (1−λ)·e^{−D_i}."""
+    a_max = jnp.max(volumes) if a_max is None else a_max
+    vol_term = volumes.astype(jnp.float32) / jnp.maximum(a_max, 1.0)
+    dist_term = jnp.exp(-kl_to_uniform(label_dist))
+    return lam * vol_term + (1.0 - lam) * dist_term
+
+
+def rank_descending(c: jax.Array) -> jax.Array:
+    """Rank(C_i): 0 for the most important device, n−1 for the least."""
+    order = jnp.argsort(-c)                       # indices sorted by desc importance
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(c.shape[0]))
+    return ranks.astype(jnp.int32)
+
+
+def upload_ratio(c: jax.Array, theta_min: float, theta_max: float) -> jax.Array:
+    """Eq. 6: θ_u,i = θ_min + (θ_max−θ_min)/|N| · Rank(C_i)."""
+    n = c.shape[0]
+    return theta_min + (theta_max - theta_min) / n * rank_descending(c).astype(jnp.float32)

@@ -1,0 +1,55 @@
+"""Staleness-aware download compression ratios (paper §4.1, Eq. 3) and the
+cluster-based ratio grouping.
+
+Participation bookkeeping uses the paper's convention: ``last_round[i] = r_i``
+is the round of device i's last participation, with r_i = 0 meaning "never
+participated" (then δ_i = t and θ_d,i = 0 ⇒ full-precision download).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def staleness(last_round: jax.Array, t: jax.Array) -> jax.Array:
+    """δ_i^t = t − r_i  (Eq. preceding Eq. 3). Shapes: [n] int32, scalar."""
+    return (t - last_round).astype(jnp.int32)
+
+
+def download_ratio(delta: jax.Array, t: jax.Array,
+                   theta_d_max: float) -> jax.Array:
+    """Eq. 3: θ_d,i = (1 − δ_i/t)·θ_d_max. Never-participated ⇒ δ=t ⇒ θ=0."""
+    t = jnp.maximum(t, 1).astype(jnp.float32)
+    frac = 1.0 - delta.astype(jnp.float32) / t
+    return jnp.clip(frac, 0.0, 1.0) * theta_d_max
+
+
+def update_participation(last_round: jax.Array, participants: jax.Array,
+                         t: jax.Array) -> jax.Array:
+    """Set last_round[i] = t for selected devices (bool mask [n])."""
+    return jnp.where(participants, t, last_round).astype(last_round.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cluster-based grouping (§4.1): the PS compresses K times, not |N^t| times.
+# 1-D staleness ⇒ quantile-bucket clustering is the natural (and jit-friendly)
+# choice; devices in a bucket share the bucket's mean-staleness ratio.
+# ---------------------------------------------------------------------------
+
+def cluster_ratios(delta: jax.Array, t: jax.Array, theta_d_max: float,
+                   n_clusters: int) -> tuple[jax.Array, jax.Array]:
+    """Group by staleness into ``n_clusters`` quantile buckets.
+
+    Returns (cluster_id [n], ratio_per_device [n]) where every device in a
+    cluster gets the ratio computed from the cluster's *mean* staleness
+    (paper: "the PS calculates an average staleness value ... applied to all
+    devices within that cluster").
+    """
+    d = delta.astype(jnp.float32)
+    edges = jnp.quantile(d, jnp.linspace(0.0, 1.0, n_clusters + 1)[1:-1])
+    cid = jnp.searchsorted(edges, d).astype(jnp.int32)  # [n] in [0, K)
+    sums = jnp.zeros(n_clusters).at[cid].add(d)
+    cnts = jnp.zeros(n_clusters).at[cid].add(1.0)
+    mean_d = sums / jnp.maximum(cnts, 1.0)
+    per_cluster = download_ratio(mean_d, t, theta_d_max)   # [K]
+    return cid, per_cluster[cid]

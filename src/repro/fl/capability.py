@@ -1,0 +1,43 @@
+"""Device capability model calibrated to the paper's testbeds (§6.1).
+
+* compute: per-sample training latency μ spans ~100× (Jetson AGX mode-0 vs
+  TX2 mode-1); device work-modes are re-drawn every 20 rounds (paper).
+* bandwidth: WiFi, fluctuating in [1, 30] Mb/s per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MODE_RESHUFFLE_PERIOD = 20      # rounds (paper §6.1)
+BW_RANGE_BPS = (1e6, 30e6)      # 1–30 Mb/s
+MU_RANGE_S = (0.002, 0.2)       # per-sample latency, 100× spread
+
+
+@dataclasses.dataclass
+class CapabilityModel:
+    n_devices: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # persistent device tier (hardware class), log-uniform
+        self._tier = np.exp(rng.uniform(np.log(MU_RANGE_S[0]),
+                                        np.log(MU_RANGE_S[1]),
+                                        self.n_devices))
+        self._bw_tier = rng.uniform(0.3, 1.0, self.n_devices)
+
+    def snapshot(self, t: int):
+        """Per-round (mu [n] s/sample, bw_down [n] b/s, bw_up [n] b/s)."""
+        epoch = t // MODE_RESHUFFLE_PERIOD
+        rng = np.random.default_rng(self.seed * 100003 + epoch)
+        mode = np.exp(rng.normal(0.0, 0.5, self.n_devices))   # work-mode factor
+        mu = np.clip(self._tier * mode, *MU_RANGE_S)
+        rng_r = np.random.default_rng(self.seed * 7919 + t)
+        lo, hi = BW_RANGE_BPS
+        bw_d = np.clip(self._bw_tier * rng_r.uniform(lo, hi, self.n_devices),
+                       lo, hi)
+        bw_u = np.clip(self._bw_tier * rng_r.uniform(lo, hi, self.n_devices),
+                       lo, hi)
+        return mu, bw_d, bw_u

@@ -1,0 +1,283 @@
+"""Track A: faithful multi-client FL simulator (paper Algorithm 1).
+
+Every participant's round is simulated exactly: staleness-dependent download
+compression + Fig.-3 recovery, τ local mini-batch-SGD iterations at the
+Eq.-9 batch size, importance-ranked upload top-k, synchronous aggregation.
+Wall-clock and traffic are accounted through the calibrated capability model
+(Eq. 7). Participants are vectorized with vmap (padded batches + masks keep
+a single jit specialization alive across heterogeneous batch sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batchsize as BS
+from repro.core import caesar as CA
+from repro.core import compression as C
+from repro.data import partition, synthetic
+from repro.fl import baselines as BL
+from repro.fl.capability import CapabilityModel
+from repro.models import paper_models as PM
+from repro.optim import sgd as SGD
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    dataset: str = "cifar10"
+    model: Optional[str] = None          # default: paper pairing
+    scheme: str = "caesar"               # caesar | fedavg | fic | cac | flexcom | prowd | pyramidfl
+    n_clients: int = 100
+    participation: float = 0.1
+    rounds: int = 100
+    p_heterogeneity: float = 5.0         # paper's p = 1/δ (default 5)
+    data_scale: float = 0.05             # dataset size multiplier (CPU budget)
+    eval_every: int = 5
+    eval_samples: int = 1000
+    seed: int = 0
+    caesar: CA.CaesarConfig = dataclasses.field(default_factory=CA.CaesarConfig)
+    sgd: SGD.SGDConfig = dataclasses.field(default_factory=SGD.SGDConfig)
+    target_accuracy: Optional[float] = None
+    # preliminary-study variants (Fig. 1): compress only one direction
+    fic_down_only: bool = False
+    fic_up_only: bool = False
+    # synthetic-task difficulty overrides (e.g. {"sep": 2.0, "noise": 1.0})
+    dataset_kwargs: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class History:
+    rounds: list = dataclasses.field(default_factory=list)
+    sim_time: list = dataclasses.field(default_factory=list)      # cumulative s
+    traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
+    accuracy: list = dataclasses.field(default_factory=list)
+    waiting: list = dataclasses.field(default_factory=list)       # per-round avg
+
+    def summary(self) -> dict:
+        return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
+                "total_time_s": self.sim_time[-1] if self.sim_time else 0.0,
+                "total_traffic_gb": (self.traffic_bits[-1] / 8e9
+                                     if self.traffic_bits else 0.0)}
+
+    def to_target(self, acc: float):
+        """(time_s, traffic_gb, round) when ``acc`` first reached, else None."""
+        for r, t, tr, a in zip(self.rounds, self.sim_time, self.traffic_bits,
+                               self.accuracy):
+            if a >= acc:
+                return t, tr / 8e9, r
+        return None
+
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        ds_fn = synthetic.DATASETS[cfg.dataset]
+        self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
+                          **(cfg.dataset_kwargs or {}))
+        model_name = cfg.model or PM.DATASET_MODEL[cfg.dataset]
+        init_fn, self.apply_fn = PM.MODELS[model_name]
+        feat_kw = {}
+        if model_name == "lr":
+            feat_kw = {"n_features": self.data.x_train.shape[-1]}
+        self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
+                               n_classes=self.data.n_classes, **feat_kw)
+        self.model_bits = C.tree_payload_bits_dense(self.params0)
+
+        self.splits, label_dist, volumes = partition.dirichlet_partition(
+            self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
+        self.volumes = volumes
+        self.label_dist = label_dist
+        self.cap = CapabilityModel(cfg.n_clients, cfg.seed)
+
+        self.caesar_state = CA.init_state(jnp.asarray(volumes, jnp.float32),
+                                          jnp.asarray(label_dist), cfg.caesar)
+        self.policy = None if cfg.scheme == "caesar" else \
+            self._make_policy(cfg.scheme)
+        self.grad_norms = np.zeros(cfg.n_clients)   # for PyramidFL ranking
+        self._build_jits()
+
+    def _make_policy(self, name):
+        if name == "fic":
+            return BL.FIC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        if name == "cac":
+            return BL.CAC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        return BL.POLICIES[name]()
+
+    # ------------------------------------------------------------------
+    # jitted kernels
+    # ------------------------------------------------------------------
+    def _build_jits(self):
+        cfg = self.cfg
+        apply_fn = self.apply_fn
+
+        def ce_loss(params, x, y, w):
+            logits = apply_fn(params, x)
+            logp = jax.nn.log_softmax(logits)
+            ll = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+            return -jnp.sum(ll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+        def local_train(params, xs, ys, ws, iter_mask, lr):
+            """τ masked SGD steps. xs [τ,b,...]; ws [τ,b]; iter_mask [τ]."""
+            def step(p, inp):
+                x, y, w, m = inp
+                g = jax.grad(ce_loss)(p, x, y, w)
+                newp = jax.tree.map(lambda a, b_: a - lr * m * b_, p, g)
+                return newp, None
+            out, _ = jax.lax.scan(step, params, (xs, ys, ws, iter_mask))
+            return out
+
+        def participant_round(global_p, local_p, xs, ys, ws, iter_mask, lr,
+                              theta_d, theta_u, use_recovery, quantize):
+            # --- download ---
+            flat_g, treedef, leaves = C._flatten(global_p)
+            flat_l, _, _ = C._flatten(local_p)
+            comp = C.hybrid_compress(flat_g, theta_d)
+            recovered = jax.lax.cond(
+                use_recovery,
+                lambda: C.hybrid_recover(comp, flat_l),
+                lambda: jnp.where(comp.mask, flat_l, comp.kept))  # plain stale sub
+            down_bits = comp.payload_bits()
+            w_init = C._unflatten(recovered, treedef, leaves)
+            # --- local training ---
+            w_fin = local_train(w_init, xs, ys, ws, iter_mask, lr)
+            flat_i, _, _ = C._flatten(w_init)
+            flat_f, _, _ = C._flatten(w_fin)
+            delta = flat_i - flat_f
+            gnorm = jnp.linalg.norm(delta)
+            # --- upload ---
+            def topk():
+                sp, bits = C.topk_sparsify(delta, theta_u)
+                return sp, bits.astype(jnp.float32)
+            def quant():   # ProWD-style: 1-bit masked elements, sign·mean
+                cc = C.hybrid_compress(delta, theta_u)
+                approx = jnp.where(cc.mask,
+                                   cc.sign.astype(jnp.float32) * cc.mean_abs,
+                                   cc.kept)
+                return approx, cc.payload_bits().astype(jnp.float32)
+            up, up_bits = jax.lax.cond(quantize, quant, topk)
+            return (C._unflatten(up, treedef, leaves), w_fin, down_bits,
+                    up_bits, gnorm)
+
+        self._round_vmapped = jax.jit(jax.vmap(
+            participant_round,
+            in_axes=(None, 0, 0, 0, 0, 0, None, 0, 0, None, None)),
+            static_argnums=())
+
+        def evaluate(params, x, y):
+            logits = apply_fn(params, x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._eval = jax.jit(evaluate)
+
+    # ------------------------------------------------------------------
+    def _sample_batches(self, clients, batch_sizes, taus, b_cap, tau_cap):
+        """numpy gather → [P, τ_cap, b_cap, ...] padded arrays + masks."""
+        xs, ys, ws, ims = [], [], [], []
+        xtr, ytr = self.data.x_train, self.data.y_train
+        for ci, b, tau in zip(clients, batch_sizes, taus):
+            shard = self.splits[ci]
+            idx = self.rng.choice(shard, size=(tau_cap, b_cap), replace=True)
+            x = xtr[idx]
+            y = ytr[idx]
+            w = np.zeros((tau_cap, b_cap), np.float32)
+            w[:, :int(b)] = 1.0
+            im = (np.arange(tau_cap) < tau).astype(np.float32)
+            xs.append(x); ys.append(y); ws.append(w); ims.append(im)
+        return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+                jnp.asarray(np.stack(ws)), jnp.asarray(np.stack(ims)))
+
+    # ------------------------------------------------------------------
+    def run(self, log: Callable[[str], None] = lambda s: None) -> History:
+        cfg = self.cfg
+        ccfg = cfg.caesar
+        n, b_max, tau = cfg.n_clients, ccfg.b_max, ccfg.tau
+        n_part = max(1, int(round(cfg.participation * n)))
+        hist = History()
+        global_p = self.params0
+        # every client starts from w0 (never-participated ⇒ full-precision DL)
+        local_p = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                               self.params0)
+        cum_time, cum_bits = 0.0, 0.0
+        is_caesar = cfg.scheme == "caesar"
+        quantize = bool(getattr(self.policy, "quantize", False))
+
+        for t in range(1, cfg.rounds + 1):
+            parts = self.rng.choice(n, n_part, replace=False)
+            mu, bw_d, bw_u = self.cap.snapshot(t)
+            lr = float(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
+
+            if is_caesar:
+                plan = CA.plan_round(self.caesar_state, jnp.int32(t), ccfg,
+                                     jnp.asarray(bw_d, jnp.float32),
+                                     jnp.asarray(bw_u, jnp.float32),
+                                     jnp.asarray(mu, jnp.float32),
+                                     float(self.model_bits))
+                theta_d = np.asarray(plan.theta_d)[parts]
+                theta_u = np.asarray(plan.theta_u)[parts]
+                batch = np.asarray(plan.batch)[parts]
+                taus = np.full(n_part, tau)
+            else:
+                ctx = {"n": n_part, "t": t, "total_rounds": cfg.rounds,
+                       "mu": mu[parts], "bw_d": bw_d[parts],
+                       "bw_u": bw_u[parts], "b_max": b_max, "tau": tau,
+                       "grad_norms": self.grad_norms[parts]}
+                p = self.policy.plan(ctx)
+                theta_d, theta_u = p.theta_d, p.theta_u
+                batch, taus = p.batch, p.local_iters
+
+            xs, ys, ws, ims = self._sample_batches(parts, batch, taus,
+                                                   b_max, tau)
+            lp_sel = jax.tree.map(lambda a: a[parts], local_p)
+            ups, new_lp, down_bits, up_bits, gnorms = self._round_vmapped(
+                global_p, lp_sel, xs, ys, ws, ims, lr,
+                jnp.asarray(theta_d, jnp.float32),
+                jnp.asarray(theta_u, jnp.float32),
+                is_caesar, quantize)
+
+            # aggregate (Algorithm 1 line 13)
+            agg = jax.tree.map(lambda u: jnp.mean(u, axis=0), ups)
+            global_p = jax.tree.map(lambda g, a: g - a, global_p, agg)
+            local_p = jax.tree.map(
+                lambda all_, new: all_.at[parts].set(new), local_p, new_lp)
+            self.grad_norms[parts] = np.asarray(gnorms)
+
+            if is_caesar:
+                mask = np.zeros(n, bool); mask[parts] = True
+                self.caesar_state = CA.post_round(
+                    self.caesar_state, jnp.asarray(mask), jnp.int32(t))
+
+            # --- accounting (Eq. 7) ---
+            q = float(self.model_bits)
+            down_b = np.asarray(down_bits, np.float64)
+            up_b = np.asarray(up_bits, np.float64)
+            times = (down_b / bw_d[parts] + up_b / bw_u[parts]
+                     + taus * batch * mu[parts])
+            cum_time += float(times.max())
+            cum_bits += float(down_b.sum() + up_b.sum())
+            waiting = float(np.mean(times.max() - times))
+
+            if t % cfg.eval_every == 0 or t == cfg.rounds:
+                ne = min(cfg.eval_samples, len(self.data.y_test))
+                acc = float(self._eval(global_p,
+                                       jnp.asarray(self.data.x_test[:ne]),
+                                       jnp.asarray(self.data.y_test[:ne])))
+                hist.rounds.append(t)
+                hist.sim_time.append(cum_time)
+                hist.traffic_bits.append(cum_bits)
+                hist.accuracy.append(acc)
+                hist.waiting.append(waiting)
+                log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} acc={acc:.4f} "
+                    f"time={cum_time:,.0f}s traffic={cum_bits/8e9:.3f}GB "
+                    f"wait={waiting:.1f}s")
+                if (cfg.target_accuracy is not None
+                        and acc >= cfg.target_accuracy):
+                    break
+        return hist

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused hybrid compress pass (paper Fig. 3 sender side).
+
+One HBM read of the tensor produces, per VMEM tile:
+  * kept values (full precision where |x| ≥ thr, else 0)
+  * int8 sign plane (±1 where compressed, 0 where kept)
+  * per-block partials (count, Σ|x|, max|x| over the compressed set)
+The tiny [n_blocks, 3] partials are folded into the (mean_abs, max_abs)
+scalars by XLA — replacing five separate elementwise+reduce HLO passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128
+
+
+def _compress_kernel(x_ref, thr_ref, kept_ref, sign_ref, part_ref):
+    x = x_ref[...].astype(jnp.float32)               # [1, BLOCK]
+    thr = thr_ref[0, 0]
+    absx = jnp.abs(x)
+    mask = absx < thr
+    kept_ref[...] = jnp.where(mask, 0.0, x).astype(kept_ref.dtype)
+    sign_ref[...] = jnp.where(mask, jnp.sign(x), 0.0).astype(jnp.int8)
+    cnt = jnp.sum(mask.astype(jnp.float32))
+    ssum = jnp.sum(jnp.where(mask, absx, 0.0))
+    smax = jnp.max(jnp.where(mask, absx, 0.0))
+    part_ref[...] = jnp.stack([cnt, ssum, smax]).reshape(1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hybrid_compress(x: jax.Array, thr: jax.Array, interpret: bool = True):
+    """Returns (kept, sign_i8, count, sum_abs, max_abs) — see ref.hybrid_compress."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_blocks = -(-n // BLOCK)
+    pad = n_blocks * BLOCK - n
+    # Pad with +inf so padding is never "compressed" (|inf| ≥ thr always).
+    flat = jnp.pad(flat.astype(jnp.float32), (0, pad),
+                   constant_values=jnp.inf).reshape(n_blocks, BLOCK)
+
+    kept, sign, part = pl.pallas_call(
+        _compress_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks, 3), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flat, thr.astype(jnp.float32).reshape(1, 1))
+
+    kept = kept.reshape(-1)[:n].reshape(shape).astype(dtype)
+    sign = sign.reshape(-1)[:n].reshape(shape)
+    count = jnp.sum(part[:, 0]).astype(jnp.int32)
+    sum_abs = jnp.sum(part[:, 1])
+    max_abs = jnp.max(part[:, 2])
+    return kept, sign, count, sum_abs, max_abs

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU they compile to
+Mosaic. ``interpret`` is resolved once at import from the default backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hybrid_compress as _hc
+from repro.kernels import recover as _rc
+from repro.kernels import topk_threshold as _tt
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def topk_threshold(x: jax.Array, ratio: jax.Array) -> jax.Array:
+    """Magnitude threshold compressing ≈ratio·n smallest elements (O(n))."""
+    return _tt.threshold(x, ratio, interpret=INTERPRET)
+
+
+def magnitude_histogram(x: jax.Array, max_abs: jax.Array) -> jax.Array:
+    return _tt.magnitude_histogram(x, max_abs, interpret=INTERPRET)
+
+
+def hybrid_compress(x: jax.Array, thr: jax.Array):
+    """(kept, sign_i8, count, sum_abs, max_abs) — fused Fig.3 sender pass."""
+    return _hc.hybrid_compress(x, thr, interpret=INTERPRET)
+
+
+def recover(kept, sign, local, mean_abs, max_abs):
+    """Fused Fig.3 receiver pass."""
+    return _rc.recover(kept, sign, local, mean_abs, max_abs,
+                       interpret=INTERPRET)
+
+
+def hybrid_roundtrip(x: jax.Array, local: jax.Array, ratio: jax.Array):
+    """Kernel-path compress→recover (mirrors core.compression.hybrid_roundtrip)."""
+    thr = topk_threshold(x, ratio)
+    kept, sign, count, sum_abs, max_abs = hybrid_compress(x, thr)
+    mean_abs = sum_abs / jnp.maximum(count, 1)
+    out = recover(kept, sign, local, mean_abs, max_abs)
+    bits = (x.size - count) * 32 + count * 1 + 64
+    return out, bits
+
+
+def decode_attention(q, k, v, length, kv_block: int = _fa.KV_BLOCK):
+    return _fa.decode_attention(q, k, v, length, interpret=INTERPRET,
+                                kv_block=kv_block)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused model recovery (paper Fig. 3 receiver side).
+
+Elementwise over (kept, sign, local) with two broadcast scalars — one fused
+HBM pass instead of the ~6-op XLA chain (sign-compare, abs-compare, two
+selects, scale, merge).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128
+
+
+def _recover_kernel(kept_ref, sign_ref, local_ref, stats_ref, out_ref):
+    kept = kept_ref[...].astype(jnp.float32)
+    sgn = sign_ref[...].astype(jnp.float32)
+    local = local_ref[...].astype(jnp.float32)
+    mean_abs = stats_ref[0, 0]
+    max_abs = stats_ref[0, 1]
+    mask = sgn != 0.0
+    sign_bad = jnp.sign(local) * sgn < 0.0
+    mag_bad = jnp.abs(local) > max_abs
+    approx = jnp.where(sign_bad | mag_bad, sgn * mean_abs, local)
+    out_ref[...] = jnp.where(mask, approx, kept).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def recover(kept: jax.Array, sign: jax.Array, local: jax.Array,
+            mean_abs: jax.Array, max_abs: jax.Array,
+            interpret: bool = True) -> jax.Array:
+    shape, dtype = local.shape, local.dtype
+    n = kept.size
+    n_blocks = -(-n // BLOCK)
+    pad = n_blocks * BLOCK - n
+
+    def tile(a, fill=0.0, dt=jnp.float32):
+        return jnp.pad(a.reshape(-1).astype(dt), (0, pad),
+                       constant_values=fill).reshape(n_blocks, BLOCK)
+
+    stats = jnp.stack([mean_abs, max_abs]).astype(jnp.float32).reshape(1, 2)
+    out = pl.pallas_call(
+        _recover_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(tile(kept), tile(sign.astype(jnp.float32)), tile(local), stats)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_histogram(x: jax.Array, n_bins: int, max_abs: jax.Array) -> jax.Array:
+    """Histogram of |x| over [0, max_abs] with ``n_bins`` equal bins.
+
+    Bin b counts elements with |x| in [b·w, (b+1)·w), last bin inclusive.
+    """
+    mag = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+    scale = n_bins / jnp.maximum(max_abs, 1e-30)
+    idx = jnp.clip((mag * scale).astype(jnp.int32), 0, n_bins - 1)
+    return jnp.zeros(n_bins, jnp.int32).at[idx].add(1)
+
+
+def threshold_from_histogram(hist: jax.Array, max_abs: jax.Array,
+                             ratio: jax.Array) -> jax.Array:
+    """Magnitude threshold below which ≈ratio·n elements fall (bin-quantized)."""
+    n_bins = hist.shape[0]
+    cdf = jnp.cumsum(hist)
+    target = ratio * cdf[-1]
+    bin_idx = jnp.searchsorted(cdf, target, side="left")
+    width = jnp.maximum(max_abs, 1e-30) / n_bins
+    return (bin_idx.astype(jnp.float32) + 1.0) * width
+
+
+def hybrid_compress(x: jax.Array, thr: jax.Array):
+    """Fused compress pass: (kept, sign_i8, count, sum_abs, max_abs_comp)."""
+    mask = jnp.abs(x) < thr
+    kept = jnp.where(mask, 0.0, x).astype(x.dtype)
+    sign = jnp.where(mask, jnp.sign(x), 0.0).astype(jnp.int8)
+    absx = jnp.abs(x).astype(jnp.float32)
+    count = jnp.sum(mask).astype(jnp.int32)
+    sum_abs = jnp.sum(jnp.where(mask, absx, 0.0))
+    max_abs = jnp.max(jnp.where(mask, absx, 0.0), initial=0.0)
+    return kept, sign, count, sum_abs, max_abs
+
+
+def recover(kept: jax.Array, sign: jax.Array, local: jax.Array,
+            mean_abs: jax.Array, max_abs: jax.Array) -> jax.Array:
+    """Fig. 3 recovery oracle (sign==0 marks full-precision slots)."""
+    mask = sign != 0
+    sgn = sign.astype(local.dtype)
+    sign_bad = jnp.sign(local) * sgn < 0
+    mag_bad = jnp.abs(local) > max_abs
+    approx = jnp.where(sign_bad | mag_bad, sgn * mean_abs, local)
+    return jnp.where(mask, approx, kept.astype(local.dtype))
+
+
+def topk_sparsify(g: jax.Array, thr: jax.Array) -> jax.Array:
+    return jnp.where(jnp.abs(g) < thr, 0.0, g).astype(g.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array | None = None) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: [B, H, D]; k/v: [B, S, Hkv, D]; length: [B] valid KV length (≤ S).
+    GQA: H a multiple of Hkv.
+    """
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / jnp.sqrt(d)
+    if length is not None:
+        pos = jnp.arange(s)[None, None, None, :]
+        logits = jnp.where(pos < length[:, None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

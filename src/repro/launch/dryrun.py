@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a script/module so the XLA_FLAGS line above executes before
+jax initializes devices. Produces one JSON per cell under experiments/dryrun/
+with memory_analysis, cost_analysis (FLOPs/bytes) and the collective-op byte
+census parsed from the optimized HLO — the inputs for EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-780m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --multi-pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.fl import distributed as D
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as S
+from repro.models import model as M
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                      r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def collective_census(hlo: str) -> dict:
+    """Per-collective byte totals from optimized-HLO result types.
+
+    For each collective instruction we record the *result* bytes and the
+    replica-group size; wire-byte estimates (ring algorithms) are derived in
+    benchmarks/roofline.py.
+    """
+    out: dict[str, dict] = {c: {"count": 0, "result_bytes": 0, "ops": []}
+                            for c in COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for c in COLLECTIVES:
+            if f" {c}(" in " " + rhs or f" {c}-start(" in " " + rhs:
+                types = _TYPE_RE.findall(rhs.split(f"{c}", 1)[0])
+                nbytes = sum(_shape_bytes(t, d) for t, d in types)
+                gm = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+                gsize = len(gm.group(1).split(",")) if gm else 0
+                gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", rhs)
+                if gm2:
+                    gsize = int(gm2.group(2))
+                out[c]["count"] += 1
+                out[c]["result_bytes"] += nbytes
+                if len(out[c]["ops"]) < 200:
+                    out[c]["ops"].append({"bytes": nbytes, "group": gsize})
+                break
+    return out
+
+
+def _lower_cell(cfg, shape_name: str, mesh, simulate_download=True,
+                error_feedback=False, compressed_collective=False,
+                local_iters=1, dp_only=False, prev_int8=False):
+    import dataclasses as dc
+    info = S.SHAPES[shape_name]
+    kind, seq, batch = info["kind"], info["seq"], info["batch"]
+    cfg = dc.replace(cfg, local_iters=local_iters, dp_only=dp_only)
+    pspecs = M.param_specs(cfg, mesh)
+    abstract = M.init_abstract(cfg)
+    shard = lambda spec: NamedSharding(mesh, spec)
+    p_shardings = jax.tree.map(shard, pspecs)
+    p_structs = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, p_shardings)
+
+    if kind == "train":
+        dcfg = D.DistConfig(simulate_download=simulate_download,
+                            use_error_feedback=error_feedback,
+                            compressed_collective=compressed_collective,
+                            prev_int8=prev_int8)
+        step = D.make_train_step(cfg, dcfg, mesh)
+        sspecs = D.state_specs(cfg, dcfg, mesh)
+        state_struct = jax.eval_shape(
+            lambda p: D.init_state(p, dcfg, mesh), abstract)
+        state_shardings = jax.tree.map(shard, sspecs)
+        state_struct = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            state_struct, state_shardings)
+        bstruct = S.batch_struct(cfg, batch, seq)
+        bshard = {k: shard(v) for k, v in
+                  S.batch_shardings(cfg, mesh, batch).items()}
+        bstruct = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                           sharding=bshard[k])
+                   for k, v in bstruct.items()}
+        fn = jax.jit(step, in_shardings=(state_shardings, bshard),
+                     out_shardings=(state_shardings, None),
+                     donate_argnums=(0,))
+        return fn.lower(state_struct, bstruct)
+
+    if kind == "prefill":
+        fn0 = D.make_prefill(cfg, mesh)
+        bstruct = S.batch_struct(cfg, batch, seq)
+        bstruct.pop("labels")
+        bshard = {k: shard(v) for k, v in
+                  S.batch_shardings(cfg, mesh, batch).items() if k in bstruct}
+        bstruct = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                           sharding=bshard[k])
+                   for k, v in bstruct.items()}
+        fn = jax.jit(fn0, in_shardings=(p_shardings, bshard))
+        return fn.lower(p_structs, bstruct)
+
+    # decode
+    fn0 = D.make_serve_step(cfg, mesh)
+    cstruct, cspecs, tok, tokspec, ln, lnspec = S.decode_inputs(
+        cfg, mesh, batch, seq)
+    c_shardings = jax.tree.map(shard, cspecs)
+    cstruct = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cstruct, c_shardings)
+    tok = jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=shard(tokspec))
+    ln = jax.ShapeDtypeStruct(ln.shape, ln.dtype, sharding=shard(lnspec))
+    fn = jax.jit(fn0, in_shardings=(p_shardings, c_shardings, shard(tokspec),
+                                    shard(lnspec)),
+                 donate_argnums=(1,))
+    return fn.lower(p_structs, cstruct, tok, ln)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
+             **variant) -> dict:
+    cfg = configs.get(arch)
+    ok, why = S.cell_supported(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "variant": variant, "status": "skipped", "why": why}
+    if not ok:
+        return rec
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered = _lower_cell(cfg, shape_name, mesh, **variant)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")},
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collectives": collective_census(hlo),
+            "hlo_lines": hlo.count("\n"),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-4000:]})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(S.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--no-download-sim", action="store_true")
+    ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--compressed-collective", action="store_true")
+    ap.add_argument("--local-iters", type=int, default=1)
+    ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--prev-int8", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(S.SHAPES) if args.shape == "all" else [args.shape]
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    variant = dict(simulate_download=not args.no_download_sim,
+                   error_feedback=args.error_feedback,
+                   compressed_collective=args.compressed_collective,
+                   local_iters=args.local_iters, dp_only=args.dp_only,
+                   prev_int8=args.prev_int8)
+
+    for arch in archs:
+        for shape_name in shapes:
+            mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+            cfg_name = configs.get(arch).name
+            fname = OUT_DIR / f"{cfg_name}__{shape_name}__{mesh_name}__{args.tag}.json"
+            if fname.exists() and not args.force:
+                print(f"[skip-cached] {fname.name}")
+                continue
+            print(f"[dryrun] {cfg_name} × {shape_name} × {mesh_name} ...",
+                  flush=True)
+            rec = run_cell(arch, shape_name, args.multi_pod, args.tag,
+                           **variant)
+            fname.write_text(json.dumps(rec, indent=1))
+            status = rec["status"]
+            extra = (f" compile={rec.get('compile_s')}s "
+                     f"flops={rec.get('flops', 0):.3e}" if status == "ok"
+                     else rec.get("why") or rec.get("error", ""))
+            print(f"  -> {status}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

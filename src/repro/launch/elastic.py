@@ -1,0 +1,59 @@
+"""Elastic scaling / failure handling for cohort-mode Caesar (Track B).
+
+Caesar's own staleness machinery (Eq. 3) is the failure-recovery story: a
+cohort (pod) that drops out simply stops participating; its staleness grows,
+and when it rejoins Eq. 3 assigns it a gentle download ratio so it recovers a
+precise model — no global restart required. This module provides the state
+surgery for the two mesh-level events:
+
+* ``shrink_state``: a pod is lost — drop its per-pod buffers (prev/EF) and
+  keep training on the survivors.
+* ``grow_state``: pods join — new cohorts start from the current global
+  params with zeroed EF (equivalent to never-participated clients: they get
+  the full-precision download on their first round, exactly Eq. 3 at δ=t).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.distributed import TrainState
+
+
+def _slice_pods(tree, keep):
+    return jax.tree.map(lambda a: a[jnp.asarray(keep)], tree)
+
+
+def shrink_state(state: TrainState, lost_pods: list[int]) -> TrainState:
+    """Remove failed pods' cohort state. Survivors keep training."""
+    if state.prev_params is None and state.ef is None:
+        return state
+    n = jax.tree.leaves(state.prev_params or state.ef)[0].shape[0]
+    keep = [i for i in range(n) if i not in set(lost_pods)]
+    if not keep:
+        raise ValueError("all pods lost")
+    return dataclasses.replace(
+        state,
+        prev_params=(_slice_pods(state.prev_params, keep)
+                     if state.prev_params is not None else None),
+        ef=_slice_pods(state.ef, keep) if state.ef is not None else None)
+
+
+def grow_state(state: TrainState, n_new: int) -> TrainState:
+    """Add cohorts: fresh pods adopt the global params (never-participated
+    semantics — first download is full precision under Eq. 3)."""
+    def grow_prev(a, p):
+        fresh = jnp.broadcast_to(p[None], (n_new,) + p.shape).astype(a.dtype)
+        return jnp.concatenate([a, fresh], axis=0)
+
+    def grow_ef(a):
+        return jnp.concatenate(
+            [a, jnp.zeros((n_new,) + a.shape[1:], a.dtype)], axis=0)
+
+    return dataclasses.replace(
+        state,
+        prev_params=(jax.tree.map(grow_prev, state.prev_params, state.params)
+                     if state.prev_params is not None else None),
+        ef=jax.tree.map(grow_ef, state.ef) if state.ef is not None else None)

@@ -1,0 +1,22 @@
+"""Production mesh builders. Functions (never module-level constants) so that
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi-pod adds the 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1×1 mesh on the single local device (smoke tests / examples)."""
+    return _mesh((1, 1), ("data", "model"))

@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × input-shape) cell.
+
+Shapes (assignment):
+    train_4k     seq=4096   global_batch=256   (training: train_step)
+    prefill_32k  seq=32768  global_batch=32    (inference prefill: forward)
+    decode_32k   seq=32768  global_batch=128   (one new token, KV cache @32k)
+    long_500k    seq=524288 global_batch=1     (long-context decode)
+
+Skips (DESIGN.md §Arch-applicability): decode/long for encoder-only;
+long_500k for full-attention archs (needs sub-quadratic mixing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    kind = SHAPES[shape]["kind"]
+    if kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "full quadratic attention at 500k ctx (per-spec skip)"
+    return True, ""
+
+
+def _dp(mesh, cfg=None):
+    if cfg is not None and cfg.dp_only:
+        return tuple(mesh.axis_names)
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _n_dp(mesh, cfg=None):
+    return math.prod(mesh.shape[a] for a in _dp(mesh, cfg))
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training/prefill batch ShapeDtypeStructs for this arch."""
+    i32 = jnp.int32
+    out: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim),
+                                             jnp.bfloat16)
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        return out
+    if cfg.frontend == "vision":
+        s_text = seq - cfg.n_patches
+        out["tokens"] = jax.ShapeDtypeStruct((batch, s_text), i32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+        out["labels"] = jax.ShapeDtypeStruct((batch, s_text), i32)
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    out["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, mesh, batch: int) -> dict:
+    dp = _dp(mesh, cfg)
+    spec = P(dp) if batch % _n_dp(mesh, cfg) == 0 else P()
+    names = ["tokens", "labels"]
+    if cfg.frontend == "audio":
+        names = ["frames", "labels"]
+    elif cfg.frontend == "vision":
+        names = ["tokens", "patches", "labels"]
+    return {k: spec for k in names}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache specs
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, seq))
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, seq: int):
+    """PartitionSpec tree matching init_cache. Shard B over dp when divisible
+    (else S — sequence parallelism for the B=1 long-context cell); shard
+    kv-heads / ssm-heads / channels over "model" when divisible."""
+    dp = _dp(mesh)
+    n_dp = _n_dp(mesh)
+    tp_size = mesh.shape["model"]
+    b_ok = batch % n_dp == 0
+
+    def div(dim, axis, size):
+        return axis if dim % size == 0 and size > 1 else None
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        nm = names[-1]
+        sh = leaf.shape          # leading L (or n_shared) axis everywhere
+        if nm in ("k", "v"):     # [L, B, S, Hkv, Dh]
+            bspec = dp if b_ok else None
+            sspec = None if b_ok else (dp if sh[2] % n_dp == 0 else None)
+            if sh[3] % tp_size == 0:          # kv-heads over model
+                return P(None, bspec, sspec, "model", None)
+            # non-divisible kv-heads: shard the SEQUENCE over model instead of
+            # the contracting head_dim (perf iteration #3b — dh-sharding made
+            # GSPMD re-shard the whole 32k cache every decode step).
+            if sspec is None and sh[2] % tp_size == 0:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, sspec, None, None)
+        if nm in ("c", "k_rope"):  # MLA latent [L, B, S, r]
+            bspec = dp if b_ok else None
+            sspec = None if b_ok else (dp if sh[2] % n_dp == 0 else None)
+            return P(None, bspec, sspec, None)
+        if nm == "ssm":          # [L, B, H, P, N]
+            return P(None, dp if b_ok else None,
+                     div(sh[2], "model", tp_size), None, None)
+        if nm == "conv":         # [L, B, W-1, ch]
+            return P(None, dp if b_ok else None, None,
+                     div(sh[3], "model", tp_size))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for,
+                                            cache_struct(cfg, batch, seq))
+
+
+def decode_inputs(cfg: ModelConfig, mesh, batch: int, seq: int):
+    """(cache_struct, cache_spec, tokens_struct, tokens_spec, length_struct)."""
+    dp = _dp(mesh)
+    b_ok = batch % _n_dp(mesh) == 0
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    length = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    bspec = P(dp) if b_ok else P()
+    return (cache_struct(cfg, batch, seq), cache_specs(cfg, mesh, batch, seq),
+            tok, bspec, length, bspec)

@@ -1,0 +1,159 @@
+"""Shared NN primitives: init helpers, RMSNorm, RoPE, SwiGLU, attention.
+
+Training/prefill attention is a chunked online-softmax ("flash-style") pure-jnp
+implementation — differentiable, remat-friendly, O(S·block) memory. The Pallas
+kernel in kernels/flash_attention.py covers the single-token decode hot path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    std = d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def gated_rms_norm(x: jax.Array, gate: jax.Array, scale: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2-style: norm(x * silu(gate))."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                    scale, eps)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions [...,S] → (cos, sin) each [...,S, dim//2] in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [S, D//2] or [B, S, D//2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — train/prefill path
+# ---------------------------------------------------------------------------
+
+def _pick_block(s: int, pref: int) -> int:
+    b = min(pref, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_block: int = 512,
+                        kv_block: int = 1024,
+                        q_offset: int = 0) -> jax.Array:
+    """q: [B,Sq,H,D]; k/v: [B,Sk,Hkv,D] (GQA folded by repeat). O(S·blk) memory.
+
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                           # Dv may differ (MLA)
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = _pick_block(sq, q_block)
+    kb = _pick_block(sk, kv_block)
+    nq, nk = sq // qb, sk // kb
+    scale = d ** -0.5
+
+    qr = q.reshape(b, nq, qb, h, d).transpose(1, 0, 3, 2, 4)   # [nq,B,H,qb,D]
+    kr = k.reshape(b, nk, kb, h, d).transpose(1, 0, 3, 2, 4)   # [nk,B,H,kb,D]
+    vr = v.reshape(b, nk, kb, h, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+        qf = qblk.astype(jnp.float32) * scale
+
+        def kv_step(carry, ki_blk):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_blk
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk.astype(jnp.float32))
+            if causal:
+                qpos = q_offset + qi * qb + jnp.arange(qb)
+                kpos = ki * kb + jnp.arange(kb)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, qb), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, qb), jnp.float32),
+                jnp.zeros((b, h, qb, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kr, vr))
+        y = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, y.astype(q.dtype)
+
+    _, ys = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))   # [nq,B,H,qb,Dv]
+    return ys.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, dv)
+
+
+def decode_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """Single-token decode: q [B,H,D], cache k/v [B,S,Hkv,D], length [B].
+
+    jnp path (GSPMD-partitionable); the Pallas kernel is the on-TPU twin.
+    """
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) / (d ** 0.5)
+    pos = jnp.arange(s)[None, None, None, :]
+    logits = jnp.where(pos < length[:, None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

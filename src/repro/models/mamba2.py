@@ -1,0 +1,169 @@
+"""Mamba2 / SSD (state-space duality) blocks — chunked matmul-form scan.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; intra-chunk interactions are a masked attention-like
+matmul (MXU-friendly), inter-chunk interactions propagate a recurrent state
+[H, P, N] via a chunk-level scan. Decode is the pure recurrence (state update
+per token, O(1) in context length — this is what makes long_500k runnable).
+
+Single B/C group (n_groups=1) shared across heads, as in the released models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k], -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """x [B,L,H,P]; dt [B,L,H] (>0); a [H] (<0); b,c [B,L,N]. Returns y [B,L,H,P]."""
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+
+    xd = (x * dt[..., None]).astype(jnp.float32)           # fold dt into x
+    da = (dt * a[None, None, :]).astype(jnp.float32)       # [B,L,H]
+
+    xc = xd.reshape(bb, nc, q, h, p)
+    dac = da.reshape(bb, nc, q, h).transpose(0, 1, 3, 2)   # [B,C,H,Q]
+    bc = b.reshape(bb, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bb, nc, q, n).astype(jnp.float32)
+
+    da_cum = jnp.cumsum(dac, axis=-1)                      # [B,C,H,Q]
+    # 1) intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(dac))                           # [B,C,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # [B,C,Q,Q]
+    att = scores[:, :, None] * lmat                        # [B,C,H,Q,Q]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", att, xc)
+
+    # 2) chunk final states
+    decay_to_end = jnp.exp(da_cum[..., -1:] - da_cum)      # [B,C,H,Q]
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_to_end, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])                 # [B,C,H]
+
+    def step(h_prev, inp):
+        dec, st = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((bb, h, p, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(step, init,
+                              (chunk_decay.transpose(1, 0, 2),
+                               states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # [B,C,H,P,N]
+
+    # 4) inter-chunk contribution
+    in_decay = jnp.exp(da_cum)                             # decay from chunk start
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, h_prevs, in_decay)
+
+    y = (y_diag + y_off).reshape(bb, l, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_decode(xt, dt, a, b, c, state):
+    """One-token recurrence. xt [B,H,P]; dt [B,H]; b,c [B,N]; state [B,H,P,N]."""
+    da = jnp.exp((dt * a[None, :]).astype(jnp.float32))    # [B,H]
+    upd = jnp.einsum("bn,bhp->bhpn", b.astype(jnp.float32),
+                     (xt * dt[..., None]).astype(jnp.float32))
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c.astype(jnp.float32))
+    return y.astype(xt.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width W) as shift-adds — no conv primitive needed
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, prev: jax.Array | None = None):
+    """x [B,L,Ch]; w [W,Ch]. prev: [B,W-1,Ch] carried state (decode) or None."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_prev = xp[:, -(width - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_prev
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba_params(key, cfg, dtype) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_zx": L.dense_init(ks[0], d, 2 * di, dtype),
+        "w_bcdt": L.dense_init(ks[1], d, 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[2], (w, di + 2 * n)) * 0.2).astype(dtype),
+        "a_log": jnp.zeros(h, jnp.float32),                # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros(h, jnp.float32),
+        "d_skip": jnp.ones(h, dtype),
+        "norm": jnp.ones(di, dtype),
+        "w_out": L.dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _projections(x, p, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zx = jnp.einsum("bld,de->ble", x, p["w_zx"])
+    z, xin = zx[..., :di], zx[..., di:]
+    bcdt = jnp.einsum("bld,de->ble", x, p["w_bcdt"])
+    b, c, dt_raw = bcdt[..., :n], bcdt[..., n:2 * n], bcdt[..., 2 * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xin, b, c, dt
+
+
+def mamba_block(x, p, cfg, state=None, conv_state=None):
+    """x [B,L,d] → (y [B,L,d], (ssm_state, conv_state)) — state given ⇒ decode."""
+    bb, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    z, xin, b, c, dt = _projections(x, p, cfg)
+    a = -jnp.exp(p["a_log"])
+
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    xbc, new_conv = causal_conv(xbc, p["conv_w"], conv_state)
+    xin, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    xh = xin.reshape(bb, l, h, ph)
+    if state is None:
+        y = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
+        new_state = None   # train path does not expose the state
+    else:
+        y1, new_state = ssd_decode(xh[:, 0], dt[:, 0], a, b[:, 0], c[:, 0],
+                                   state)
+        y = y1[:, None]
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bb, l, di)
+    y = L.gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    return out, (new_state, new_conv)
+
+
+def init_mamba_cache(batch: int, cfg, dtype) -> tuple[jax.Array, jax.Array]:
+    h, ph, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ssm = jnp.zeros((batch, h, ph, n), jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner + 2 * n), dtype)
+    return ssm, conv

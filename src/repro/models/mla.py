@@ -1,0 +1,115 @@
+"""Multi-head Latent Attention (DeepSeek-V3 style).
+
+Training/prefill materializes per-head K/V from the compressed latent;
+decode uses the *absorbed* form: scores and values are computed directly in
+the (kv_lora + rope) latent space, so the KV cache stores only
+``kv_lora_rank + qk_rope_dim`` floats per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mla_params(key, cfg, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qn, qr, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": L.dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": jnp.ones(cfg.q_lora_rank, dtype),
+        "w_uq": L.dense_init(ks[1], cfg.q_lora_rank, h * (qn + qr), dtype),
+        "w_dkv": L.dense_init(ks[2], d, cfg.kv_lora_rank + qr, dtype),
+        "kv_norm": jnp.ones(cfg.kv_lora_rank, dtype),
+        # stored per-head for the absorbed decode path: [kv_lora, H, qn/vh]
+        "w_uk": (L.dense_init(ks[3], cfg.kv_lora_rank, h * qn, dtype)
+                 .reshape(cfg.kv_lora_rank, h, qn)),
+        "w_uv": (L.dense_init(ks[4], cfg.kv_lora_rank, h * vh, dtype)
+                 .reshape(cfg.kv_lora_rank, h, vh)),
+        "w_o": L.dense_init(ks[5], h * vh, d, dtype),
+    }
+
+
+def _project_q(x, p, cfg):
+    b, s, _ = x.shape
+    h, qn, qr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = L.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"],
+                    cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", ql, p["w_uq"]).reshape(b, s, h, qn + qr)
+    return q[..., :qn], q[..., qn:]                      # nope, rope parts
+
+
+def _project_latent(x, p, cfg):
+    ckr = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c = L.rms_norm(ckr[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckr[..., cfg.kv_lora_rank:]                 # [B,S,qr] shared head
+    return c, k_rope
+
+
+def mla_attention_train(x, p, cfg, positions):
+    """Materialized path for train/prefill. Returns ([B,S,d], cache)."""
+    b, s, _ = x.shape
+    h, qn, qr, vh = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(x, p, cfg)
+    c, k_rope = _project_latent(x, p, cfg)
+
+    cos, sin = L.rope_freqs(qr, cfg.rope_theta, positions)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)  # [B,S,1,qr]
+
+    k_nope = jnp.einsum("bsr,rhn->bshn", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kr = jnp.broadcast_to(k_rope, (b, s, h, qr))
+    kk = jnp.concatenate([k_nope, kr], axis=-1)
+
+    y = L.flash_attention_jnp(q, kk, v, causal=cfg.causal)
+    out = jnp.einsum("bse,ed->bsd", y.reshape(b, s, h * vh), p["w_o"])
+    cache = {"c": c, "k_rope": k_rope[:, :, 0, :]}
+    return out, cache
+
+
+def mla_attention_decode(x, p, cfg, cache, length):
+    """Absorbed decode: x [B,1,d]; cache c [B,S,kv_lora], k_rope [B,S,qr]."""
+    b = x.shape[0]
+    h, qn, qr, vh = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (qn + qr) ** -0.5
+
+    q_nope, q_rope = _project_q(x, p, cfg)                 # [B,1,H,*]
+    c_new, kr_new = _project_latent(x, p, cfg)             # [B,1,*]
+    pos = length[:, None]                                  # [B,1]
+    cos, sin = L.rope_freqs(qr, cfg.rope_theta, pos)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    kr_new = L.apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    cache_c = _place_at(cache["c"], c_new, length)
+    cache_kr = _place_at(cache["k_rope"], kr_new, length)
+
+    # absorb W_uk into q: q_lat [B,H,kv_lora]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], p["w_uk"])
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                       cache_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                        cache_kr.astype(jnp.float32))
+    logits = (s_lat + s_rope) * scale
+    mask = jnp.arange(cache_c.shape[1])[None, None, :] <= length[:, None, None]
+    logits = jnp.where(mask, logits, L.NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, cache_c.astype(jnp.float32))
+    y = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("be,ed->bd", y.reshape(b, -1), p["w_o"])[:, None, :]
+    return out, {"c": cache_c, "k_rope": cache_kr}
+
+
+def _place_at(cache, new, length):
+    """Write new [B,1,D] at position length[b] in cache [B,S,D]."""
+    s = cache.shape[1]
+    onehot = (jnp.arange(s)[None, :] == length[:, None]).astype(cache.dtype)
+    return cache * (1 - onehot)[..., None] + onehot[..., None] * new.astype(cache.dtype)
+
+
+def init_mla_cache(batch: int, seq: int, cfg, dtype) -> dict:
+    return {"c": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype)}

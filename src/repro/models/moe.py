@@ -1,0 +1,165 @@
+"""Token-choice top-k MoE with expert parallelism.
+
+Distribution (Track B, DESIGN.md §5): experts are sharded over the "model"
+axis (EP), expert weights FSDP-sharded over "data" at rest and all-gathered
+per layer (ZeRO-3 style). Tokens stay on their data shard; every model shard
+computes its local experts for the (model-replicated) token set and a `psum`
+over "model" merges expert outputs — no all-to-all required under TP.
+
+Dispatch is capacity-bounded and sort-based (static shapes): assignments are
+argsorted by expert id, ranked within their expert, and scattered into an
+[E_local, C] index buffer; compute is two batched matmuls (MXU-friendly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    return max(8, int(math.ceil(n_tokens * top_k / n_experts * cf)))
+
+
+def route(x2d: jax.Array, router: jax.Array, top_k: int):
+    """Softmax-normalized top-k routing. x2d [T, d]; router [d, E]."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    wts, ids = jax.lax.top_k(probs, top_k)              # [T, K]
+    wts = wts / jnp.maximum(jnp.sum(wts, -1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), wts
+
+
+def aux_load_loss(x2d: jax.Array, router: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (beyond-paper extra)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = probs.shape[-1]
+    _, ids = jax.lax.top_k(probs, top_k)
+    frac = jnp.mean(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=(0, 1))
+    return e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+
+def routed_experts_local(x2d: jax.Array, ids: jax.Array, wts: jax.Array,
+                         w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                         e_start, n_experts_total: int,
+                         capacity: int) -> jax.Array:
+    """Compute the routed-expert output for the locally owned expert slice.
+
+    x2d [T, d]; ids/wts [T, K]; w_* [E_loc, d, f] / [E_loc, f, d].
+    ``e_start`` may be traced (axis_index-derived).
+    """
+    t, d = x2d.shape
+    k = ids.shape[1]
+    e_loc = w_gate.shape[0]
+    c = capacity
+
+    local = ids - e_start                                  # [T, K]
+    valid = (local >= 0) & (local < e_loc)
+    lid = jnp.where(valid, local, e_loc).reshape(-1)       # sentinel group e_loc
+    order = jnp.argsort(lid, stable=True)                  # [T*K]
+    sorted_ids = lid[order]
+    group_start = jnp.searchsorted(sorted_ids, jnp.arange(e_loc + 1))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - group_start[sorted_ids]
+    ok = (pos < c) & (sorted_ids < e_loc)
+    slot = jnp.where(ok, sorted_ids * c + pos, e_loc * c)  # overflow bucket
+
+    tok_of_assign = (jnp.arange(t * k, dtype=jnp.int32) // k)[order]
+    wt_of_assign = wts.reshape(-1)[order]
+    buf_tok = jnp.full(e_loc * c + 1, t, jnp.int32).at[slot].set(tok_of_assign)
+    buf_wt = jnp.zeros(e_loc * c + 1, jnp.float32).at[slot].set(
+        jnp.where(ok, wt_of_assign, 0.0))
+    buf_tok, buf_wt = buf_tok[:-1], buf_wt[:-1]
+
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xe = x_pad[buf_tok].reshape(e_loc, c, d)               # [E_loc, C, d]
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)
+
+    y = jnp.zeros((t + 1, d), jnp.float32)
+    y = y.at[buf_tok].add(ye.reshape(-1, d).astype(jnp.float32)
+                          * buf_wt[:, None])
+    return y[:t].astype(x2d.dtype)
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg, mesh=None,
+            manual_axes=()) -> jax.Array:
+    """x [B, S, d] → routed-experts output (shared experts handled by caller).
+
+    mesh=None → single-device path (smoke/unit tests, Track A).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+
+    if mesh is None or "model" not in mesh.axis_names:
+        x2d = x.reshape(b * s, d)
+        ids, wts = route(x2d, p["router"], k)
+        cap = _capacity(b * s, k, e, cfg.capacity_factor)
+        y = routed_experts_local(x2d, ids, wts, p["w_gate"], p["w_up"],
+                                 p["w_down"], 0, e, cap)
+        return y.reshape(b, s, d)
+
+    assert not cfg.dp_only, "dp_only policy is for TP-free (non-MoE) archs"
+    axes = tuple(a for a in mesh.axis_names if a not in manual_axes)
+    dp = tuple(a for a in axes if a != "model")
+    n_model = mesh.shape["model"]
+    e_m = e // n_model
+    assert e_m * n_model == e, f"{e} experts not divisible by model={n_model}"
+    n_dp = math.prod(mesh.shape[a] for a in dp)
+    t_loc = (b // n_dp) * s
+    cap = _capacity(t_loc, k, e, cfg.capacity_factor)
+
+    # FSDP shard dim for expert weights: contract dim d over "data" when divisible.
+    d_shard = "data" if d % mesh.shape["data"] == 0 else None
+
+    has_shared = "shared" in p
+
+    def body(xl, router, wg_l, wu_l, wd_l, sg_l, su_l, sd_l):
+        m = jax.lax.axis_index("model")
+        if d_shard is not None:
+            wg = jax.lax.all_gather(wg_l, d_shard, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu_l, d_shard, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd_l, d_shard, axis=2, tiled=True)
+        else:
+            wg, wu, wd = wg_l, wu_l, wd_l
+        bl, sl, dl = xl.shape
+        x2d = xl.reshape(bl * sl, dl)
+        ids, wts = route(x2d, router, k)
+        y = routed_experts_local(x2d, ids, wts, wg, wu, wd,
+                                 m * e_m, e, cap)
+        y = y.reshape(bl, sl, dl)
+        if has_shared:
+            # shared expert computed TP-style on the local f-shard and folded
+            # into the SAME psum as the routed output (perf iteration #2b:
+            # one activation all-reduce per MoE layer instead of two).
+            g = jnp.einsum("bsd,df->bsf", xl, sg_l)
+            u = jnp.einsum("bsd,df->bsf", xl, su_l)
+            y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, sd_l)
+        return jax.lax.psum(y, "model")
+
+    wspec_in = P("model", d_shard, None)
+    wspec_out = P("model", None, d_shard)
+    sspec_in = P(None, "model")      # shared expert: TP over f
+    sspec_out = P("model", None)
+    if has_shared:
+        sh = p["shared"]
+        shared_args = (sh["w_gate"], sh["w_up"], sh["w_down"])
+        shared_specs = (sspec_in, sspec_in, sspec_out)
+    else:
+        z = jnp.zeros((x.shape[-1], 0), x.dtype)
+        shared_args = (z, z, jnp.zeros((0, x.shape[-1]), x.dtype))
+        shared_specs = (P(None, None), P(None, None), P(None, None))
+    # mesh=None → ambient mesh (correct axis types when pod is already manual)
+    return jax.shard_map(
+        body,
+        in_specs=(P(dp, None, None), P(None, None), wspec_in, wspec_in,
+                  wspec_out) + shared_specs,
+        out_specs=P(dp, None, None),
+        axis_names=set(axes), check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], *shared_args)

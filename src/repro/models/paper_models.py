@@ -1,0 +1,150 @@
+"""The paper's own model families (§6.1) for the Track-A simulator:
+
+* ResNet-18 (CIFAR-10) — faithful basic-block ResNet; a width-reduced variant
+  ("cnn_cifar") is the CPU-simulator default.
+* CNN-H (HAR): three 5×5 conv layers + two FC [paper ref 39].
+* CNN-S (Speech): four 1-D conv layers + one FC [paper ref 31].
+* LR (OPPO-TS): logistic regression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv1d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+def _kinit(key, shape, fan_in):
+    return jax.random.normal(key, shape) * (2.0 / fan_in) ** 0.5
+
+
+def _norm(x):  # parameter-free group-ish norm (BN-free keeps FL aggregation clean)
+    mean = jnp.mean(x, axis=(1, 2), keepdims=True) if x.ndim == 4 else \
+        jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True) if x.ndim == 4 else \
+        jnp.var(x, axis=1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5)
+
+
+# --- ResNet-18 (CIFAR) ------------------------------------------------------
+
+def resnet18_init(key, n_classes=10, width=64):
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": _kinit(next(ks), (3, 3, 3, width), 27)}
+    chans = [width, width * 2, width * 4, width * 8]
+    blocks = []
+    c_in = width
+    for stage, c in enumerate(chans):
+        for b in range(2):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            blk = {
+                "c1": _kinit(next(ks), (3, 3, c_in, c), 9 * c_in),
+                "c2": _kinit(next(ks), (3, 3, c, c), 9 * c),
+            }
+            if c_in != c or stride != 1:
+                blk["proj"] = _kinit(next(ks), (1, 1, c_in, c), c_in)
+            blocks.append(blk)
+            c_in = c
+    p["blocks"] = blocks
+    p["fc_w"] = _kinit(next(ks), (c_in, n_classes), c_in)
+    p["fc_b"] = jnp.zeros(n_classes)
+    return p
+
+
+_RESNET_STRIDES = (1, 1, 2, 1, 2, 1, 2, 1)   # static per-block strides
+
+
+def resnet18_apply(p, x):
+    h = jax.nn.relu(_norm(_conv(x, p["stem"])))
+    for blk, s in zip(p["blocks"], _RESNET_STRIDES):
+        r = _conv(h, blk["proj"], s) if "proj" in blk else h
+        h2 = jax.nn.relu(_norm(_conv(h, blk["c1"], s)))
+        h2 = _norm(_conv(h2, blk["c2"]))
+        h = jax.nn.relu(h2 + r)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc_w"] + p["fc_b"]
+
+
+def cnn_cifar_init(key, n_classes=10, width=16):
+    return resnet18_init(key, n_classes, width)
+
+
+# --- CNN-H (HAR): x [B, 128, 9] ---------------------------------------------
+
+def cnn_har_init(key, n_classes=6):
+    ks = jax.random.split(key, 6)
+    return {
+        "c1": _kinit(ks[0], (5, 9, 32), 45),
+        "c2": _kinit(ks[1], (5, 32, 64), 160),
+        "c3": _kinit(ks[2], (5, 64, 64), 320),
+        "f1_w": _kinit(ks[3], (64 * 16, 128), 64 * 16),
+        "f1_b": jnp.zeros(128),
+        "f2_w": _kinit(ks[4], (128, n_classes), 128),
+        "f2_b": jnp.zeros(n_classes),
+    }
+
+
+def cnn_har_apply(p, x):
+    h = jax.nn.relu(_norm(_conv1d(x, p["c1"], 2)))     # 64
+    h = jax.nn.relu(_norm(_conv1d(h, p["c2"], 2)))     # 32
+    h = jax.nn.relu(_norm(_conv1d(h, p["c3"], 2)))     # 16
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["f1_w"] + p["f1_b"])
+    return h @ p["f2_w"] + p["f2_b"]
+
+
+# --- CNN-S (Speech): x [B, 4000, 1] -----------------------------------------
+
+def cnn_speech_init(key, n_classes=35):
+    ks = jax.random.split(key, 6)
+    return {
+        "c1": _kinit(ks[0], (9, 1, 16), 9),
+        "c2": _kinit(ks[1], (9, 16, 32), 144),
+        "c3": _kinit(ks[2], (9, 32, 64), 288),
+        "c4": _kinit(ks[3], (9, 64, 64), 576),
+        "f_w": _kinit(ks[4], (64, n_classes), 64),
+        "f_b": jnp.zeros(n_classes),
+    }
+
+
+def cnn_speech_apply(p, x):
+    h = x
+    for name, stride in (("c1", 4), ("c2", 4), ("c3", 4), ("c4", 4)):
+        h = jax.nn.relu(_norm(_conv1d(h, p[name], stride)))
+    h = jnp.mean(h, axis=1)
+    return h @ p["f_w"] + p["f_b"]
+
+
+# --- LR (OPPO-TS): x [B, F] ---------------------------------------------------
+
+def lr_init(key, n_features=1024, n_classes=2):
+    return {"w": jax.random.normal(key, (n_features, n_classes)) * 0.01,
+            "b": jnp.zeros(n_classes)}
+
+
+def lr_apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+MODELS: dict[str, tuple[Callable, Callable]] = {
+    "resnet18": (resnet18_init, resnet18_apply),
+    "cnn_cifar": (cnn_cifar_init, resnet18_apply),
+    "cnn_har": (cnn_har_init, cnn_har_apply),
+    "cnn_speech": (cnn_speech_init, cnn_speech_apply),
+    "lr": (lr_init, lr_apply),
+}
+
+DATASET_MODEL = {"cifar10": "cnn_cifar", "har": "cnn_har",
+                 "speech": "cnn_speech", "oppo_ts": "lr"}

@@ -1,0 +1,37 @@
+"""Mini-batch SGD (+momentum) with exponential LR decay — the paper's optimizer."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    decay: float = 0.993          # per-round multiplicative decay (paper §6.1)
+    momentum: float = 0.0
+
+
+def lr_at(cfg: SGDConfig, t: jax.Array) -> jax.Array:
+    return cfg.lr * cfg.decay ** t.astype(jnp.float32)
+
+
+def init_momentum(params: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def apply(params: Any, grads: Any, lr, cfg: SGDConfig,
+          momentum_state: Any = None):
+    """Returns (new_params, new_momentum_state)."""
+    if cfg.momentum and momentum_state is not None:
+        new_m = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                             momentum_state, grads)
+        new_p = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                             params, new_m)
+        return new_p, new_m
+    new_p = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                         params, grads)
+    return new_p, momentum_state

@@ -1,0 +1,126 @@
+"""Unit + property tests for the Caesar compression operators (paper §4.1/4.2)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import compression as C
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(n=1000, seed=0, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+class TestHybridCompress:
+    def test_ratio_zero_is_lossless(self):
+        x = _rand()
+        rec, bits = C.hybrid_roundtrip(x, jnp.zeros_like(x), jnp.float32(0.0))
+        np.testing.assert_allclose(rec, x, rtol=1e-6)
+        assert int(bits) >= x.size * 32  # full precision payload
+
+    def test_payload_decreases_with_ratio(self):
+        x = _rand()
+        prev = None
+        for r in [0.0, 0.25, 0.5, 0.75]:
+            c = C.hybrid_compress(x, jnp.float32(r))
+            b = int(c.payload_bits())
+            if prev is not None:
+                assert b < prev
+            prev = b
+
+    def test_fig3_example(self):
+        """A worked example in the style of paper Fig. 3 (ratio 5/9)."""
+        g = jnp.array([0.1, 0.9, 1.2, -0.4, -0.5, 0.3, 2.1, 0.8, -0.3])
+        local = jnp.array([0.2, -0.7, 1.1, -0.3, -0.6, -0.2, 2.0, 0.7, 0.9])
+        c = C.hybrid_compress(g, jnp.float32(5 / 9))
+        rec = C.hybrid_recover(c, local)
+        # compressed set = {0.1, -0.4, -0.5, 0.3, -0.3}: mean 0.32, max 0.5
+        assert float(c.mean_abs) == pytest.approx(0.32, abs=1e-6)
+        assert float(c.max_abs) == pytest.approx(0.5, abs=1e-6)
+        # kept (full-precision) elements pass through exactly
+        for i, v in [(1, 0.9), (2, 1.2), (6, 2.1), (7, 0.8)]:
+            assert float(rec[i]) == pytest.approx(v, abs=1e-6)
+        # agreeing local params substituted verbatim
+        assert float(rec[0]) == pytest.approx(0.2)
+        assert float(rec[3]) == pytest.approx(-0.3)
+        # magnitude violation (|-0.6| > 0.5) → sign·mean
+        assert float(rec[4]) == pytest.approx(-0.32, abs=1e-6)
+        # sign contradiction (g=+0.3, local=-0.2) → sign·mean
+        assert float(rec[5]) == pytest.approx(0.32, abs=1e-6)
+        # contradiction + violation (g=-0.3, local=+0.9) → -mean
+        assert float(rec[8]) == pytest.approx(-0.32, abs=1e-6)
+
+    @given(ratio=st.floats(0.05, 0.9), seed=st.integers(0, 100))
+    def test_recovery_beats_naive_zero_fill(self, ratio, seed):
+        """Recovery with a nearby local model must beat sign·mean alone."""
+        x = _rand(seed=seed)
+        local = x + 0.05 * _rand(seed=seed + 1, scale=1.0)
+        rec, _ = C.hybrid_roundtrip(x, local, jnp.float32(ratio))
+        c = C.hybrid_compress(x, jnp.float32(ratio))
+        naive = jnp.where(c.mask, c.sign.astype(jnp.float32) * c.mean_abs,
+                          c.kept)
+        err_rec = float(jnp.mean((rec - x) ** 2))
+        err_naive = float(jnp.mean((naive - x) ** 2))
+        assert err_rec <= err_naive + 1e-9
+
+    @given(ratio=st.floats(0.0, 1.0))
+    def test_compressed_fraction_close_to_ratio(self, ratio):
+        x = _rand(5000)
+        mask = C.compress_mask(x, jnp.float32(ratio))
+        frac = float(jnp.mean(mask))
+        assert abs(frac - ratio) < 0.05
+
+    def test_recovery_error_bounded_by_max_abs(self):
+        """Every compressed slot's recovery error ≤ 2·max_abs (sign known)."""
+        x = _rand()
+        local = _rand(seed=5)  # unrelated local model (worst case)
+        c = C.hybrid_compress(x, jnp.float32(0.5))
+        rec = C.hybrid_recover(c, local)
+        err = jnp.abs(rec - x)[c.mask]
+        assert float(jnp.max(err)) <= 2 * float(c.max_abs) + 1e-6
+
+
+class TestTopK:
+    @given(ratio=st.floats(0.1, 0.9), seed=st.integers(0, 50))
+    def test_sparsity_and_survivors_exact(self, ratio, seed):
+        g = _rand(seed=seed)
+        sp, bits = C.topk_sparsify(g, jnp.float32(ratio))
+        kept = sp != 0
+        # survivors are exactly the original values
+        np.testing.assert_allclose(np.asarray(sp)[np.asarray(kept)],
+                                   np.asarray(g)[np.asarray(kept)])
+        # dropped are the smallest magnitudes
+        if bool(kept.any()) and bool((~kept).any()):
+            assert float(jnp.min(jnp.abs(g[kept]))) >= \
+                float(jnp.max(jnp.abs(g[~kept]))) - 1e-6
+
+    def test_error_feedback_conserves_signal(self):
+        """EF invariant: sparse + ef_new == grad + ef_old (no signal lost)."""
+        g = {"a": _rand(200, 1), "b": _rand(300, 2)}
+        ef = {"a": _rand(200, 3, 0.1), "b": _rand(300, 4, 0.1)}
+        sp, new_ef, _ = C.ef_compress(g, ef, jnp.float32(0.5), enabled=True)
+        lhs = jax.tree.map(lambda s, e: s + e, sp, new_ef)
+        rhs = jax.tree.map(lambda a, b: a + b, g, ef)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5),
+                     lhs, rhs)
+
+
+class TestTreeOps:
+    def test_tree_roundtrip_structure_and_dtype(self):
+        tree = {"w": jnp.ones((4, 5), jnp.float32),
+                "b": jnp.arange(3, dtype=jnp.float32)}
+        rec, bits = C.tree_hybrid_roundtrip(tree, tree, jnp.float32(0.3))
+        assert jax.tree.structure(rec) == jax.tree.structure(tree)
+        # identical local model ⇒ recovery is exact wherever signs agree
+        np.testing.assert_allclose(rec["w"], tree["w"], rtol=1e-6)
+
+    def test_dense_payload(self):
+        tree = {"w": jnp.ones((10, 10))}
+        assert C.tree_payload_bits_dense(tree) == 100 * 32

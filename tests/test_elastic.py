@@ -1,0 +1,61 @@
+"""Elastic pod scaling: cohort-state surgery survives shrink/grow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.fl import distributed as D
+from repro.launch import elastic
+from repro.models import model as M
+
+
+def _state(n_pods=4):
+    cfg = configs.get("qwen1p5_4b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = D.DistConfig(use_error_feedback=True)
+    st = D.init_state(params, dcfg, mesh=None)
+    # fake a multi-pod state
+    rep = lambda a: jnp.broadcast_to(a[0:1], (n_pods,) + a.shape[1:]) * \
+        (1 + jnp.arange(n_pods, dtype=a.dtype).reshape((n_pods,) + (1,) * (a.ndim - 1)))
+    st.prev_params = jax.tree.map(rep, st.prev_params)
+    st.ef = jax.tree.map(lambda a: jnp.broadcast_to(a[0:1],
+                                                    (n_pods,) + a.shape[1:]),
+                         st.ef)
+    return st, cfg
+
+
+def test_shrink_drops_lost_pod():
+    st, _ = _state(4)
+    st2 = elastic.shrink_state(st, lost_pods=[1])
+    lead = jax.tree.leaves(st2.prev_params)[0]
+    assert lead.shape[0] == 3
+    # pod 0, 2, 3 kept in order
+    orig = jax.tree.leaves(st.prev_params)[0]
+    np.testing.assert_allclose(np.asarray(lead[1], np.float32),
+                               np.asarray(orig[2], np.float32))
+
+
+def test_shrink_all_raises():
+    st, _ = _state(2)
+    with pytest.raises(ValueError):
+        elastic.shrink_state(st, lost_pods=[0, 1])
+
+
+def test_grow_adds_fresh_cohorts_from_global():
+    st, _ = _state(2)
+    st2 = elastic.grow_state(st, n_new=2)
+    prev = jax.tree.leaves(st2.prev_params)[0]
+    assert prev.shape[0] == 4
+    # new cohorts carry the *global* params (never-participated semantics)
+    glob = jax.tree.leaves(st.params)[0]
+    np.testing.assert_allclose(np.asarray(prev[3], np.float32),
+                               np.asarray(glob, np.float32))
+    ef = jax.tree.leaves(st2.ef)[0]
+    np.testing.assert_allclose(np.asarray(ef[2:], np.float32), 0.0)
+
+
+def test_shrink_then_grow_roundtrip_shapes():
+    st, _ = _state(3)
+    st2 = elastic.grow_state(elastic.shrink_state(st, [0]), 1)
+    assert jax.tree.leaves(st2.prev_params)[0].shape[0] == 3

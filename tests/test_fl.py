@@ -1,0 +1,107 @@
+"""FL substrate integration tests: Track-A simulator, partitioner, capability."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.caesar import CaesarConfig
+from repro.data import partition, synthetic
+from repro.fl.capability import CapabilityModel
+from repro.fl.simulation import SimConfig, Simulator
+
+
+class TestPartition:
+    def test_iid_equal_volumes(self):
+        labels = np.random.default_rng(0).integers(0, 10, 1000)
+        splits, ld, vol = partition.dirichlet_partition(labels, 10, p=0.0)
+        assert all(abs(v - 100) <= 1 for v in vol)
+
+    def test_heterogeneity_increases_kl(self):
+        labels = np.random.default_rng(0).integers(0, 10, 20000)
+        kls = []
+        for p in [1, 5, 10]:
+            _, ld, _ = partition.dirichlet_partition(labels, 20, p=p, seed=1)
+            e = np.clip(ld, 1e-12, 1)
+            kls.append(np.mean(np.sum(e * np.log(e * 10), axis=1)))
+        assert kls[0] < kls[1] < kls[2]
+
+    def test_every_client_has_data(self):
+        labels = np.random.default_rng(0).integers(0, 6, 5000)
+        splits, _, vol = partition.dirichlet_partition(labels, 50, p=10)
+        assert (vol >= 8).all()
+
+
+class TestCapability:
+    def test_modes_change_every_20_rounds(self):
+        cap = CapabilityModel(16, seed=0)
+        mu1, _, _ = cap.snapshot(1)
+        mu19, _, _ = cap.snapshot(19)
+        mu21, _, _ = cap.snapshot(21)
+        np.testing.assert_allclose(mu1, mu19)      # same mode epoch
+        assert not np.allclose(mu1, mu21)          # re-drawn
+
+    def test_bandwidth_in_paper_range(self):
+        cap = CapabilityModel(32, seed=1)
+        _, bd, bu = cap.snapshot(3)
+        assert bd.min() >= 1e6 and bd.max() <= 30e6
+
+
+def _cfg(**kw):
+    base = dict(dataset="har", rounds=8, n_clients=24, data_scale=0.25,
+                eval_every=4, participation=0.25,
+                dataset_kwargs={"sep": 2.2, "noise": 1.5},  # easy variant
+                caesar=CaesarConfig(tau=5, b_max=16))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+class TestSimulator:
+    def test_caesar_learns(self):
+        h = Simulator(_cfg()).run()
+        assert h.accuracy[-1] > 0.5          # synthetic task is separable
+        assert h.traffic_bits[-1] > 0
+        assert h.sim_time[-1] > 0
+
+    def test_traffic_strictly_below_fedavg(self):
+        h_c = Simulator(_cfg()).run()
+        h_f = Simulator(_cfg(scheme="fedavg")).run()
+        assert h_c.traffic_bits[-1] < h_f.traffic_bits[-1]
+
+    @pytest.mark.parametrize("scheme", ["fic", "cac", "flexcom", "prowd",
+                                        "pyramidfl"])
+    def test_baselines_run(self, scheme):
+        h = Simulator(_cfg(scheme=scheme, rounds=4)).run()
+        assert len(h.accuracy) >= 1
+        assert np.isfinite(h.accuracy[-1])
+
+    def test_staleness_bookkeeping(self):
+        sim = Simulator(_cfg(rounds=4))
+        sim.run()
+        lr = np.asarray(sim.caesar_state.last_round)
+        assert lr.max() >= 1                 # someone participated
+        assert (lr >= 0).all()
+
+    def test_batch_opt_reduces_waiting_vs_fixed(self):
+        cfg_on = _cfg(rounds=6)
+        cfg_off = _cfg(rounds=6, caesar=CaesarConfig(
+            tau=5, b_max=16, use_batch_opt=False))
+        w_on = np.mean(Simulator(cfg_on).run().waiting)
+        w_off = np.mean(Simulator(cfg_off).run().waiting)
+        assert w_on <= w_off + 1e-6
+
+    def test_history_to_target(self):
+        h = Simulator(_cfg()).run()
+        hit = h.to_target(0.0)
+        assert hit is not None and hit[2] >= 1
+
+
+class TestSyntheticData:
+    def test_shapes_match_paper(self):
+        d = synthetic.cifar10_like(scale=0.01)
+        assert d.x_train.shape[1:] == (32, 32, 3) and d.n_classes == 10
+        d = synthetic.har_like(scale=0.1)
+        assert d.x_train.shape[1:] == (128, 9) and d.n_classes == 6
+        d = synthetic.speech_like(scale=0.01)
+        assert d.x_train.shape[1:] == (4000, 1) and d.n_classes == 35
+        d = synthetic.oppo_ts_like(scale=0.01)
+        assert d.n_classes == 2

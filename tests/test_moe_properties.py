@@ -1,0 +1,93 @@
+"""Property-based tests for the MoE dispatch invariants (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models import moe as MOE
+
+hypothesis.settings.register_profile("moe", deadline=None, max_examples=20)
+hypothesis.settings.load_profile("moe")
+
+
+@given(t=st.integers(4, 64), e=st.sampled_from([4, 8]),
+       k=st.integers(1, 3), seed=st.integers(0, 50))
+def test_routing_weights_normalized_and_ids_valid(t, e, k, seed):
+    k = min(k, e)
+    d = 16
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, d))
+    router = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, e))
+    ids, wts = MOE.route(x, router, k)
+    assert int(ids.min()) >= 0 and int(ids.max()) < e
+    np.testing.assert_allclose(np.asarray(jnp.sum(wts, -1)), 1.0, rtol=1e-5)
+    assert (np.asarray(wts) >= 0).all()
+
+
+@given(t=st.integers(4, 48), seed=st.integers(0, 30))
+def test_dispatch_no_token_double_count(t, seed):
+    """With identity experts (w_gate/w_up/w_down shaped to pass-through-ish),
+    every surviving assignment contributes exactly its routing weight."""
+    d, e, k, cap = 8, 4, 2, 1024      # capacity ample ⇒ no drops
+    key = jax.random.PRNGKey(seed)
+    x = jnp.ones((t, d))
+    ids = jax.random.randint(key, (t, k), 0, e)
+    wts = jnp.full((t, k), 0.5)
+    # experts that output exactly their input: silu(g)*u @ wd == x requires
+    # engineered weights; instead use linear probes and compare against a
+    # dense per-assignment reference.
+    wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (e, d, d)) * 0.3
+    wu = jax.random.normal(jax.random.PRNGKey(seed + 2), (e, d, d)) * 0.3
+    wd = jax.random.normal(jax.random.PRNGKey(seed + 3), (e, d, d)) * 0.3
+    y = MOE.routed_experts_local(x, ids, wts, wg, wu, wd, 0, e, cap)
+    ref = jnp.zeros((t, d))
+    for ti in range(t):
+        for j in range(k):
+            eid = int(ids[ti, j])
+            h = jax.nn.silu(x[ti] @ wg[eid]) * (x[ti] @ wu[eid])
+            ref = ref.at[ti].add(0.5 * (h @ wd[eid]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+@given(seed=st.integers(0, 30))
+def test_capacity_drops_monotone(seed):
+    """Shrinking capacity can only reduce the output magnitude (drops)."""
+    t, d, e, k = 32, 8, 4, 2
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, d))
+    ids = jnp.zeros((t, k), jnp.int32)      # all tokens to expert 0 (worst case)
+    wts = jnp.full((t, k), 0.5)
+    wg = jnp.ones((e, d, d)) * 0.1
+    wu = jnp.ones((e, d, d)) * 0.1
+    wd = jnp.ones((e, d, d)) * 0.1
+    norms = []
+    for cap in (4, 16, 64):
+        y = MOE.routed_experts_local(x, ids, wts, wg, wu, wd, 0, e, cap)
+        norms.append(float(jnp.sum(jnp.count_nonzero(y, axis=1) > 0)))
+    assert norms[0] <= norms[1] <= norms[2]
+    # ample capacity serves every token
+    assert norms[2] == t
+
+
+@given(e_start=st.integers(0, 3))
+def test_expert_slice_partition_sums_to_whole(e_start):
+    """Computing expert slices separately and psum-ing equals the full MoE —
+    the invariant the EP shard_map relies on."""
+    t, d, e, k, cap = 24, 8, 4, 2, 1024
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (t, d))
+    router = jax.random.normal(jax.random.PRNGKey(8), (d, e))
+    ids, wts = MOE.route(x, router, k)
+    wg = jax.random.normal(jax.random.PRNGKey(9), (e, d, d)) * 0.2
+    wu = jax.random.normal(jax.random.PRNGKey(10), (e, d, d)) * 0.2
+    wd = jax.random.normal(jax.random.PRNGKey(11), (e, d, d)) * 0.2
+    full = MOE.routed_experts_local(x, ids, wts, wg, wu, wd, 0, e, cap)
+    parts = sum(
+        MOE.routed_experts_local(x, ids, wts, wg[s:s + 1], wu[s:s + 1],
+                                 wd[s:s + 1], s, e, cap)
+        for s in range(e))
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,126 @@
+"""Eq. 3/4/5/6/9 policy-layer tests (staleness, importance, batch size)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import batchsize as BS
+from repro.core import caesar as CA
+from repro.core import importance as IM
+from repro.core import staleness as ST
+
+
+class TestStaleness:
+    def test_eq3_exact(self):
+        # δ=0 (just participated) → θ_d_max; δ=t (never) → 0
+        t = jnp.int32(10)
+        delta = jnp.array([0, 5, 10])
+        r = ST.download_ratio(delta, t, 0.6)
+        np.testing.assert_allclose(r, [0.6, 0.3, 0.0], rtol=1e-6)
+
+    @given(t=st.integers(1, 1000), last=st.integers(0, 999))
+    @settings(max_examples=30, deadline=None)
+    def test_monotone_in_staleness(self, t, last):
+        last = min(last, t)
+        d1 = ST.staleness(jnp.int32(last), jnp.int32(t))
+        d2 = ST.staleness(jnp.int32(max(0, last - 1)), jnp.int32(t))
+        r1 = ST.download_ratio(d1, jnp.int32(t), 0.6)
+        r2 = ST.download_ratio(d2, jnp.int32(t), 0.6)
+        assert float(r2) <= float(r1) + 1e-6  # staler ⇒ smaller ratio
+
+    def test_cluster_grouping_reduces_distinct_ratios(self):
+        delta = jnp.arange(64)
+        cid, ratios = ST.cluster_ratios(delta, jnp.int32(64), 0.6, 4)
+        assert len(np.unique(np.asarray(ratios))) <= 4
+        assert len(np.unique(np.asarray(cid))) == 4
+        # same cluster ⇒ same ratio
+        for c in range(4):
+            rs = np.asarray(ratios)[np.asarray(cid) == c]
+            assert np.allclose(rs, rs[0])
+
+    def test_participation_update(self):
+        lr = jnp.zeros(4, jnp.int32)
+        mask = jnp.array([True, False, True, False])
+        new = ST.update_participation(lr, mask, jnp.int32(7))
+        np.testing.assert_array_equal(np.asarray(new), [7, 0, 7, 0])
+
+
+class TestImportance:
+    def test_kl_uniform_is_zero(self):
+        ld = jnp.ones((3, 10)) / 10
+        np.testing.assert_allclose(IM.kl_to_uniform(ld), 0.0, atol=1e-6)
+
+    def test_eq5_ordering(self):
+        """Uniform-dist big-volume device most important; skewed small least."""
+        vol = jnp.array([1000.0, 1000.0, 10.0])
+        ld = jnp.stack([jnp.ones(10) / 10,
+                        jnp.array([0.91] + [0.01] * 9),
+                        jnp.array([0.91] + [0.01] * 9)])
+        c = IM.importance(vol, ld)
+        assert float(c[0]) > float(c[1]) > float(c[2])
+
+    def test_eq6_rank_ratio_bounds(self):
+        c = jax.random.uniform(jax.random.PRNGKey(0), (50,))
+        r = IM.upload_ratio(c, 0.1, 0.6)
+        assert float(r.min()) >= 0.1 - 1e-6
+        assert float(r.max()) <= 0.6
+        # most important device gets the smallest ratio
+        assert float(r[jnp.argmax(c)]) == min(np.asarray(r))
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_rank_is_permutation(self, seed):
+        c = jax.random.uniform(jax.random.PRNGKey(seed), (20,))
+        ranks = np.asarray(IM.rank_descending(c))
+        assert sorted(ranks.tolist()) == list(range(20))
+
+
+class TestBatchSize:
+    def test_eq9_no_device_exceeds_leader(self):
+        n = 16
+        rng = np.random.default_rng(0)
+        theta_d = jnp.asarray(rng.uniform(0, 0.6, n), jnp.float32)
+        theta_u = jnp.asarray(rng.uniform(0.1, 0.6, n), jnp.float32)
+        bw = jnp.asarray(rng.uniform(1e6, 3e7, n), jnp.float32)
+        mu = jnp.asarray(rng.uniform(0.001, 0.1, n), jnp.float32)
+        q = 8e6
+        b, leader = BS.optimize_batch_sizes(theta_d, theta_u, q, bw, bw, 30,
+                                            mu, 32)
+        times = BS.round_times(theta_d, theta_u, q, bw, bw, 30, b, mu)
+        m_leader = float(times[leader])
+        # Eq. 9 floor ⇒ everyone ≤ leader time + one sample of slack
+        slack = 30 * float(mu.max()) * 1.0
+        assert float(times.max()) <= m_leader + slack + 1e-6
+        assert int(b[leader]) == 32
+
+    def test_batch_opt_reduces_waiting(self):
+        n = 16
+        rng = np.random.default_rng(1)
+        theta = jnp.asarray(rng.uniform(0.1, 0.6, n), jnp.float32)
+        bw = jnp.asarray(rng.uniform(1e6, 3e7, n), jnp.float32)
+        mu = jnp.asarray(rng.uniform(0.001, 0.1, n), jnp.float32)
+        q = 8e6
+        b_opt, _ = BS.optimize_batch_sizes(theta, theta, q, bw, bw, 30, mu, 32)
+        t_opt = BS.round_times(theta, theta, q, bw, bw, 30, b_opt, mu)
+        t_fix = BS.round_times(theta, theta, q, bw, bw, 30,
+                               jnp.full(n, 32), mu)
+        assert float(BS.idle_waiting(t_opt)) < float(BS.idle_waiting(t_fix))
+
+
+class TestCaesarPlan:
+    def test_never_participated_gets_full_precision(self):
+        cfg = CA.CaesarConfig(n_clusters=0)
+        st_ = CA.init_state(jnp.array([10.0, 20.0]), jnp.ones((2, 4)) / 4, cfg)
+        plan = CA.plan_round(st_, jnp.int32(5), cfg, jnp.ones(2) * 1e7,
+                             jnp.ones(2) * 1e7, jnp.ones(2) * 0.01, 1e6)
+        np.testing.assert_allclose(np.asarray(plan.theta_d), 0.0)
+
+    def test_ablation_flags(self):
+        cfg = CA.CaesarConfig(use_deviation_compress=False,
+                              use_batch_opt=False)
+        st_ = CA.init_state(jnp.array([10.0, 20.0]), jnp.ones((2, 4)) / 4, cfg)
+        plan = CA.plan_round(st_, jnp.int32(5), cfg, jnp.ones(2) * 1e7,
+                             jnp.ones(2) * 1e7, jnp.ones(2) * 0.01, 1e6)
+        assert len(set(np.asarray(plan.theta_u).tolist())) == 1  # fixed ratio
+        assert (np.asarray(plan.batch) == cfg.b_max).all()       # fixed batch
