@@ -8,6 +8,7 @@ and fl/distributed.py) consume it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -95,3 +96,13 @@ def post_round(state: CaesarState, participants: jax.Array,
     return dataclasses.replace(
         state, last_round=st.update_participation(state.last_round,
                                                   participants, t))
+
+
+# Jitted entry points for the per-round driver loop. ``cfg`` is a frozen
+# (hashable) dataclass, so it is a static argument — one compilation per
+# simulation, zero per-round retracing. The flat-parameter engine
+# (fl/simulation.py) calls these instead of the eager functions above so the
+# planning layer never dispatches op-by-op on the host.
+plan_round_jit = functools.partial(jax.jit,
+                                   static_argnames=("cfg",))(plan_round)
+post_round_jit = jax.jit(post_round)

@@ -1,10 +1,23 @@
 """Caesar's hybrid compression operator (paper §4.1 Fig. 3) and top-k transport.
 
-All operators are pure-jnp, jit-able, and shape-static. "Compression" in the
-simulator is *semantic*: the deviation (information loss) is applied exactly as
-the wire format would, and the wire size is accounted analytically in bytes
-(`payload_bits`). On the datacenter track the payload reduction is realized as
-reduced-precision/reduced-cardinality collectives (see fl/distributed.py).
+Two operator families live here:
+
+* **Reference operators** (`hybrid_compress`, `hybrid_recover`,
+  `topk_sparsify`, …): pure-jnp, exact-quantile thresholds, shape-static.
+  These define the semantics and are what the property tests pin down.
+* **Fused operators** (`fused_*`): the hot-path family used by the
+  flat-parameter round engine (DESIGN.md §1). Thresholds come from a 256-bin
+  magnitude histogram (O(n), one HBM pass — DESIGN.md §3) and every op
+  dispatches through a *backend* switch (DESIGN.md §4): ``pallas`` (compiled
+  Mosaic kernels on TPU), ``interpret`` (the same kernels through the Pallas
+  interpreter), or ``jnp`` (pure-jnp twins, the fast CPU path). The backend is
+  resolved once per simulation, never per call.
+
+"Compression" in the simulator is *semantic*: the deviation (information loss)
+is applied exactly as the wire format would, and the wire size is accounted
+analytically in bits (`payload_bits`). On the datacenter track the payload
+reduction is realized as reduced-precision/reduced-cardinality collectives
+(see fl/distributed.py).
 
 Conventions
 -----------
@@ -148,6 +161,66 @@ def _unflatten(flat: jax.Array, treedef, leaves) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# ---------------------------------------------------------------------------
+# Flat-parameter representation (DESIGN.md §1)
+#
+# The round engine stores the global model as ONE [n_params] f32 vector and
+# every client-local model as a row of a [n_clients, n_params] buffer for the
+# whole simulation. FlatSpec is the static metadata needed to rebuild the
+# pytree — built once at init; `unflatten_vector` is only called where a
+# pytree is genuinely required (the model's apply_fn and eval).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static layout of a pytree inside a flat f32 vector."""
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    offsets: tuple
+    n_params: int
+
+    def __hash__(self):  # usable as a static jit argument
+        return hash((self.treedef, self.shapes, self.offsets))
+
+
+def flat_spec(tree: Pytree) -> FlatSpec:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = [int(l.size) for l in leaves]
+    offsets = tuple(int(o) for o in jnp.cumsum(jnp.array([0] + sizes))[:-1])
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, n_params=int(sum(sizes)))
+
+
+def flatten_tree(tree: Pytree) -> tuple[jax.Array, FlatSpec]:
+    """One-time flatten at engine init. Returns ([n_params] f32, spec)."""
+    spec = flat_spec(tree)
+    return flatten_vector(tree, spec), spec
+
+
+def flatten_vector(tree: Pytree, spec: FlatSpec) -> jax.Array:
+    """Concatenate a tree matching ``spec`` into an [n_params] f32 vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if (len(leaves) != len(spec.shapes)
+            or any(l.shape != s for l, s in zip(leaves, spec.shapes))):
+        raise ValueError("tree layout does not match FlatSpec")
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def unflatten_vector(flat: jax.Array, spec: FlatSpec) -> Pytree:
+    """Rebuild the pytree from a flat vector (static slices — XLA fuses)."""
+    out = []
+    for shape, dtype, off in zip(spec.shapes, spec.dtypes, spec.offsets):
+        size = 1
+        for s in shape:
+            size *= s
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
 def tree_hybrid_roundtrip(tree: Pytree, local_tree: Pytree,
                           ratio: jax.Array) -> tuple[Pytree, jax.Array]:
     """Whole-model download compression with a single global threshold.
@@ -189,3 +262,172 @@ def ef_compress(g: Pytree, ef: Pytree, ratio: jax.Array,
     sparse, bits = tree_topk_sparsify(corrected, ratio)
     new_ef = jax.tree.map(lambda c, s: c - s, corrected, sparse)
     return sparse, new_ef, bits
+
+
+# ---------------------------------------------------------------------------
+# Fused hot-path operators with backend dispatch (DESIGN.md §3–4).
+#
+# Thresholds are histogram-quantized (within one bin width of the exact
+# quantile, N_BINS bins over [0, max|x|]); compress/recover are single-pass.
+# ``backend`` ∈ {"pallas", "interpret", "jnp"} — resolve once per simulation
+# with `resolve_backend` and thread the string through; it is a Python-level
+# switch, so the jitted computation contains exactly one implementation.
+# ---------------------------------------------------------------------------
+
+# the histogram resolution is a property of the kernel family — import the
+# canonical constant so the jnp twins can never drift from the Pallas path
+from repro.kernels.topk_threshold import N_BINS  # noqa: E402
+
+BACKENDS = ("pallas", "interpret", "jnp")
+_BISECT_STEPS = N_BINS.bit_length() - 1          # log2(N_BINS)
+
+
+def resolve_backend(name: str = "auto") -> str:
+    """Map a requested backend to a concrete one, once per simulation.
+
+    "auto" → compiled Pallas kernels on TPU, pure-jnp twins elsewhere (the
+    Pallas interpreter is orders of magnitude slower than jnp on CPU and is
+    only useful for kernel-fidelity tests).
+    """
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; want one of "
+                         f"{BACKENDS + ('auto',)}")
+    return name
+
+
+def _kernel_mods():
+    from repro.kernels import hybrid_compress as _hc
+    from repro.kernels import recover as _rc
+    from repro.kernels import topk_threshold as _tt
+    return _hc, _rc, _tt
+
+
+def fused_histogram_cdf(x: jax.Array, backend: str = "jnp"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """(cdf [N_BINS] f32, max_abs scalar) of |x| — one pass over x.
+
+    The cdf is shared state: per-device thresholds for the SAME tensor (e.g.
+    the global model against many θ_d) are O(1) lookups via
+    `threshold_from_cdf` instead of one sort per device.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(flat))
+    if backend == "jnp":
+        from repro.kernels import ref as KREF
+        hist = KREF.magnitude_histogram(flat, N_BINS, max_abs)
+    else:
+        _, _, _tt = _kernel_mods()
+        hist = _tt.magnitude_histogram(flat, max_abs,
+                                       interpret=backend != "pallas")
+    return jnp.cumsum(hist).astype(jnp.float32), max_abs
+
+
+def threshold_from_cdf(cdf: jax.Array, max_abs: jax.Array,
+                       ratio: jax.Array) -> jax.Array:
+    """Lower bin edge whose cdf first reaches ratio·n (strict-< semantics).
+
+    Using the LOWER edge keeps ratio=0 exactly lossless (thr=0 ⇒ nothing
+    compressed under ``|x| < thr``) and stays within one bin width of
+    ``jnp.quantile(|x|, ratio)`` for every ratio.
+    """
+    n_bins = cdf.shape[0]
+    target = jnp.clip(ratio, 0.0, 1.0) * cdf[-1]
+    bin_idx = jnp.searchsorted(cdf, target, side="left")
+    width = jnp.maximum(max_abs, 1e-30) / n_bins
+    return bin_idx.astype(jnp.float32) * width
+
+
+def _bisect_threshold(x: jax.Array, ratio: jax.Array) -> jax.Array:
+    """Histogram-equivalent threshold via 8-step bisection over bin edges.
+
+    Finds the smallest edge e·w (w = max|x|/N_BINS) whose below-count reaches
+    ratio·n — the same lower-bin-edge result as `threshold_from_cdf`, but
+    each step is a vectorized compare+sum instead of a scatter-add histogram
+    (XLA CPU scatters are serial; log2(N_BINS) reductions are ~5× faster and
+    vmap cleanly over participants).
+    """
+    mag = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+    n = mag.shape[0]
+    max_abs = jnp.max(mag)
+    width = jnp.maximum(max_abs, 1e-30) / N_BINS
+    target = jnp.clip(ratio, 0.0, 1.0) * n
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = (lo + hi) // 2
+        cnt = jnp.sum(mag < mid.astype(jnp.float32) * width)
+        above = cnt >= target
+        return jnp.where(above, lo, mid), jnp.where(above, mid, hi)
+
+    _, hi = jax.lax.fori_loop(0, _BISECT_STEPS, body,
+                              (jnp.int32(0), jnp.int32(N_BINS)))
+    return (hi.astype(jnp.float32) - 1.0) * width
+
+
+def fused_threshold(x: jax.Array, ratio: jax.Array,
+                    backend: str = "jnp") -> jax.Array:
+    """O(n) histogram threshold ≈ quantile(|x|, ratio) within one bin width."""
+    if backend == "jnp":
+        return _bisect_threshold(x, ratio)
+    cdf, max_abs = fused_histogram_cdf(x, backend)
+    return threshold_from_cdf(cdf, max_abs, ratio)
+
+
+def fused_compress(x: jax.Array, thr: jax.Array, backend: str = "jnp"):
+    """Single-pass Fig.-3 sender: (kept, sign_i8, count, sum_abs, max_abs)."""
+    if backend == "jnp":
+        from repro.kernels import ref as KREF
+        return KREF.hybrid_compress(x, thr)
+    _hc, _, _ = _kernel_mods()
+    return _hc.hybrid_compress(x, thr, interpret=backend != "pallas")
+
+
+def fused_recover(kept: jax.Array, sign: jax.Array, local: jax.Array,
+                  mean_abs: jax.Array, max_abs: jax.Array,
+                  backend: str = "jnp") -> jax.Array:
+    """Single-pass Fig.-3 receiver (sign==0 marks full-precision slots)."""
+    if backend == "jnp":
+        from repro.kernels import ref as KREF
+        return KREF.recover(kept, sign, local, mean_abs, max_abs)
+    _, _rc, _ = _kernel_mods()
+    return _rc.recover(kept, sign, local, mean_abs, max_abs,
+                       interpret=backend != "pallas")
+
+
+def hybrid_payload_bits(n: int, count: jax.Array) -> jax.Array:
+    """Wire bits of the hybrid format: fp32 survivors + 1-bit signs + stats."""
+    count = count.astype(jnp.float32)
+    return (n - count) * FULL_BITS + count * SIGN_BITS + STAT_BITS
+
+
+def topk_payload_bits(n_keep: jax.Array) -> jax.Array:
+    """Wire bits of sparse top-k: (index, fp32 value) per survivor."""
+    return n_keep.astype(jnp.float32) * (FULL_BITS + INDEX_BITS)
+
+
+def fused_hybrid_roundtrip(x: jax.Array, local: jax.Array, ratio: jax.Array,
+                           backend: str = "jnp"
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Fused compress→recover. Returns (recovered, payload_bits)."""
+    thr = fused_threshold(x, ratio, backend)
+    kept, sign, count, sum_abs, max_abs = fused_compress(x, thr, backend)
+    mean_abs = sum_abs / jnp.maximum(count, 1)
+    rec = fused_recover(kept, sign, local, mean_abs, max_abs, backend)
+    return rec, hybrid_payload_bits(x.size, count)
+
+
+def topk_sparsify_at(g: jax.Array, thr: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Top-k sparsify at a precomputed threshold (strict ``|g| < thr``)."""
+    dropped = jnp.abs(g.astype(jnp.float32)) < thr
+    sparse = jnp.where(dropped, 0.0, g.astype(jnp.float32)).astype(g.dtype)
+    n_keep = g.size - jnp.sum(dropped)
+    return sparse, topk_payload_bits(n_keep)
+
+
+def fused_topk(g: jax.Array, ratio: jax.Array, backend: str = "jnp"
+               ) -> tuple[jax.Array, jax.Array]:
+    """Fused top-k sparsify. Returns (sparse_g, payload_bits)."""
+    return topk_sparsify_at(g, fused_threshold(g, ratio, backend))

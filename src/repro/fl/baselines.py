@@ -1,7 +1,10 @@
 """Compression-policy baselines (paper §6.1): FedAvg, FlexCom, ProWD, PyramidFL,
 plus the preliminary-study policies FIC and CAC (§2.2).
 
-A policy maps this round's context to per-device (θ_d, θ_u, batch, quantize).
+A policy maps this round's context to a per-device ``Plan``; every scheme's
+model math then runs through the SAME fused flat-parameter round engine
+(fl/simulation.py) — the only per-policy switches are the plan arrays and the
+class-level ``quantize`` flag, which the engine reads once at build time.
 ``quantize=True`` marks ProWD-style bit-width reduction (modeled as 1-bit
 hybrid compression of *all* masked elements at ratio θ, same deviation
 machinery, different traffic accounting handled by the compressor).
@@ -17,10 +20,18 @@ THETA_LO, THETA_HI = 0.1, 0.6          # paper bound [36]
 
 @dataclasses.dataclass
 class Plan:
-    theta_d: np.ndarray     # download compression ratio per device
-    theta_u: np.ndarray     # upload compression ratio per device
-    batch: np.ndarray       # batch size per device
-    local_iters: np.ndarray  # τ per device
+    theta_d: np.ndarray     # download compression ratio per device (f32)
+    theta_u: np.ndarray     # upload compression ratio per device (f32)
+    batch: np.ndarray       # batch size per device (int)
+    local_iters: np.ndarray  # τ per device (int)
+
+    def __post_init__(self):
+        # the round engine jits against fixed dtypes — normalize here so no
+        # policy can trigger a respecialization mid-simulation
+        self.theta_d = np.asarray(self.theta_d, np.float32)
+        self.theta_u = np.asarray(self.theta_u, np.float32)
+        self.batch = np.asarray(self.batch, np.int32)
+        self.local_iters = np.asarray(self.local_iters, np.int32)
 
 
 def _cap_ratio(mu, bw_d, bw_u):
@@ -30,7 +41,16 @@ def _cap_ratio(mu, bw_d, bw_u):
     return (slow - slow.min()) / max(slow.max() - slow.min(), 1e-9)
 
 
-class FedAvg:
+class Policy:
+    """Base: no quantization, full batch, fixed τ. Subclasses set the ratios."""
+    name = "base"
+    quantize = False     # ProWD-style 1-bit transport (engine build-time flag)
+
+    def plan(self, ctx) -> Plan:
+        raise NotImplementedError
+
+
+class FedAvg(Policy):
     """No compression, fixed identical batch size."""
     name = "fedavg"
 
@@ -40,7 +60,7 @@ class FedAvg:
                     np.full(n, ctx["b_max"]), np.full(n, ctx["tau"]))
 
 
-class FIC:
+class FIC(Policy):
     """Fixed identical compression (both directions)."""
     name = "fic"
 
@@ -54,7 +74,7 @@ class FIC:
         return Plan(td, tu, np.full(n, ctx["b_max"]), np.full(n, ctx["tau"]))
 
 
-class CAC:
+class CAC(Policy):
     """Capability-aware compression: weak devices compress more [25–28]."""
     name = "cac"
 
@@ -70,7 +90,7 @@ class CAC:
         return Plan(td, tu, np.full(n, ctx["b_max"]), np.full(n, ctx["tau"]))
 
 
-class FlexCom:
+class FlexCom(Policy):
     """Top-K upload compression from network condition; batch ramps up [25]."""
     name = "flexcom"
 
@@ -84,7 +104,7 @@ class FlexCom:
         return Plan(np.zeros(n), r, b, np.full(n, ctx["tau"]))
 
 
-class ProWD:
+class ProWD(Policy):
     """Bandwidth-determined quantization level on both directions [51]."""
     name = "prowd"
     quantize = True
@@ -96,7 +116,7 @@ class ProWD:
         return Plan(r, r, np.full(n, ctx["b_max"]), np.full(n, ctx["tau"]))
 
 
-class PyramidFL:
+class PyramidFL(Policy):
     """Rank by gradient norm → compression; adapts local iteration count [36]."""
     name = "pyramidfl"
 

@@ -22,11 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels import ref as KREF
+from repro.core import compression as C
 from repro.models import model as M
 from repro.models.config import ModelConfig
-
-N_BINS = 256
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +38,7 @@ class DistConfig:
     compressed_collective: bool = False  # beyond-paper: bf16 delta pmean
     prev_int8: bool = False          # beyond-paper: int8 stale-model buffer
                                      # (absmax-scaled; recovery reference only)
+    backend: str = "auto"            # fused-operator backend (DESIGN.md §4)
 
 
 @jax.tree_util.register_dataclass
@@ -79,6 +78,27 @@ def dequantize_tree(qtree, like):
 def _n_pods(mesh) -> int:
     return mesh.shape["pod"] if (mesh is not None
                                  and "pod" in mesh.axis_names) else 1
+
+
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """Partial-manual shard_map across old/new jax APIs.
+
+    New jax exposes ``jax.shard_map(..., axis_names=…, check_vma=…)``; older
+    releases spell the same thing ``jax.experimental.shard_map.shard_map``
+    with the *complement* ``auto=`` set and ``check_rep=``. Note the old-API
+    branch only keeps THIS module importable/buildable on old jax — full
+    mesh execution also needs the new ambient-mesh shard_map inside the
+    model stack (models/model.py, models/moe.py), which is why the mesh
+    tests skip on old jax.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
 
 
 def init_state(params, dcfg: DistConfig, mesh=None) -> TrainState:
@@ -126,37 +146,37 @@ def state_specs(cfg: ModelConfig, dcfg: DistConfig, mesh) -> TrainState:
 
 
 # ---------------------------------------------------------------------------
-# O(n) per-leaf threshold (histogram; jnp twin of kernels/topk_threshold)
+# Per-leaf compression through the SAME fused operator layer as the Track-A
+# round engine (core.compression.fused_*): O(n) histogram thresholds + fused
+# compress/recover, with the backend resolved once per train-step build.
+# Leaves stay separate (flattening across leaves would fight sharding).
 # ---------------------------------------------------------------------------
 
-def _threshold(x: jax.Array, ratio: jax.Array) -> jax.Array:
-    max_abs = jnp.max(jnp.abs(x))
-    hist = KREF.magnitude_histogram(x, N_BINS, max_abs)
-    return KREF.threshold_from_histogram(hist, max_abs, ratio)
+def _leaf_hybrid_roundtrip(x, local, ratio, backend):
+    xf = x.astype(jnp.float32)
+    rec, _ = C.fused_hybrid_roundtrip(xf, local.astype(jnp.float32), ratio,
+                                      backend)
+    return rec.astype(local.dtype)
 
 
-def _leaf_hybrid_roundtrip(x, local, ratio):
-    thr = _threshold(x, ratio)
-    kept, sign, cnt, ssum, smax = KREF.hybrid_compress(x, thr)
-    mean_abs = ssum / jnp.maximum(cnt, 1)
-    return KREF.recover(kept, sign, local, mean_abs, smax)
+def _leaf_topk(x, ratio, backend):
+    sparse, _ = C.fused_topk(x, ratio, backend)
+    return sparse
 
 
-def _leaf_topk(x, ratio):
-    return KREF.topk_sparsify(x, _threshold(x, ratio))
+def tree_download_recover(params, prev, ratio, backend: str = "jnp"):
+    return jax.tree.map(
+        lambda g, l: _leaf_hybrid_roundtrip(g, l, ratio, backend),
+        params, prev)
 
 
-def tree_download_recover(params, prev, ratio):
-    return jax.tree.map(lambda g, l: _leaf_hybrid_roundtrip(g, l, ratio),
-                        params, prev)
-
-
-def tree_upload_compress(delta, ef, ratio):
+def tree_upload_compress(delta, ef, ratio, backend: str = "jnp"):
     """Returns (sparse_delta, new_ef)."""
     if ef is None:
-        return jax.tree.map(lambda d: _leaf_topk(d, ratio), delta), None
+        return jax.tree.map(lambda d: _leaf_topk(d, ratio, backend),
+                            delta), None
     corrected = jax.tree.map(lambda d, e: d + e.astype(d.dtype), delta, ef)
-    sparse = jax.tree.map(lambda d: _leaf_topk(d, ratio), corrected)
+    sparse = jax.tree.map(lambda d: _leaf_topk(d, ratio, backend), corrected)
     new_ef = jax.tree.map(lambda c, s: (c - s).astype(c.dtype), corrected,
                           sparse)
     return sparse, new_ef
@@ -167,12 +187,13 @@ def tree_upload_compress(delta, ef, ratio):
 # ---------------------------------------------------------------------------
 
 def _cohort_round(params, prev, ef, batch, theta_d, theta_u,
-                  cfg: ModelConfig, dcfg: DistConfig, mesh, manual_axes=()):
+                  cfg: ModelConfig, dcfg: DistConfig, mesh, manual_axes=(),
+                  backend: str = "jnp"):
     # (1) download: recover a precise initial model from the stale local copy
     if dcfg.simulate_download and prev is not None:
         local_ref = (dequantize_tree(prev, params) if dcfg.prev_int8
                      else prev)
-        w_init = tree_download_recover(params, local_ref, theta_d)
+        w_init = tree_download_recover(params, local_ref, theta_d, backend)
     else:
         w_init = params
 
@@ -196,7 +217,7 @@ def _cohort_round(params, prev, ef, batch, theta_d, theta_u,
 
     # (3) local delta in model dtype; (4) upload sparsification (+EF)
     delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype), w_init, w_fin)
-    sparse, new_ef = tree_upload_compress(delta, ef, theta_u)
+    sparse, new_ef = tree_upload_compress(delta, ef, theta_u, backend)
     if dcfg.compressed_collective:
         sparse = jax.tree.map(lambda d: d.astype(jnp.bfloat16), sparse)
     new_prev = quantize_tree(w_fin) if dcfg.prev_int8 else w_fin
@@ -207,6 +228,7 @@ def make_train_step(cfg: ModelConfig, dcfg: DistConfig, mesh):
     """Builds the jit-able Caesar-round train_step(state, batch)."""
     has_pod = mesh is not None and "pod" in mesh.axis_names
     pspecs = M.param_specs(cfg, mesh) if mesh is not None else None
+    backend = C.resolve_backend(dcfg.backend)   # once per step build
 
     def train_step(state: TrainState, batch):
         if has_pod:
@@ -217,7 +239,7 @@ def make_train_step(cfg: ModelConfig, dcfg: DistConfig, mesh):
                     params, sq(prev) if prev is not None else None,
                     sq(ef) if ef is not None else None,
                     batch_l, theta_d, theta_u, cfg, dcfg, mesh,
-                    manual_axes=("pod",))
+                    manual_axes=("pod",), backend=backend)
                 # (5) compressed deltas cross the pod axis (the "WiFi")
                 agg = jax.tree.map(lambda d: jax.lax.pmean(d, "pod"), sparse)
                 return (agg, ex(w_fin),
@@ -226,13 +248,13 @@ def make_train_step(cfg: ModelConfig, dcfg: DistConfig, mesh):
 
             rep = lambda t: jax.tree.map(lambda _: P(), t)
             podded = lambda t: jax.tree.map(lambda _: P("pod"), t)
-            agg, w_fin, new_ef, loss = jax.shard_map(
-                per_pod, mesh=mesh,
+            agg, w_fin, new_ef, loss = _shard_map(
+                per_pod, mesh,
                 in_specs=(rep(state.params), podded(state.prev_params),
                           podded(state.ef), podded(batch), P(), P()),
                 out_specs=(rep(state.params), podded(state.prev_params),
                            podded(state.ef), P()),
-                axis_names={"pod"}, check_vma=False,
+                axis_names={"pod"},
             )(state.params, state.prev_params, state.ef, batch,
               state.theta_d, state.theta_u)
         else:
@@ -242,7 +264,8 @@ def make_train_step(cfg: ModelConfig, dcfg: DistConfig, mesh):
                 if state.prev_params is not None else None,
                 jax.tree.map(lambda a: a[0], state.ef)
                 if state.ef is not None else None,
-                batch, state.theta_d, state.theta_u, cfg, dcfg, mesh)
+                batch, state.theta_d, state.theta_u, cfg, dcfg, mesh,
+                backend=backend)
             agg = sparse
             w_fin = jax.tree.map(lambda a: a[None], w_fin1)
             new_ef = (jax.tree.map(lambda a: a[None], new_ef1)

@@ -6,6 +6,17 @@ Eq.-9 batch size, importance-ranked upload top-k, synchronous aggregation.
 Wall-clock and traffic are accounted through the calibrated capability model
 (Eq. 7). Participants are vectorized with vmap (padded batches + masks keep
 a single jit specialization alive across heterogeneous batch sizes).
+
+The round runs on the **flat-parameter engine** (DESIGN.md §1): the global
+model is ONE [n_params] f32 vector and all client-local models live in a
+single [n_clients, n_params] buffer for the whole simulation. The model
+pytree exists only at init (flatten once) and inside the model's apply_fn
+(static-slice unflatten, fused by XLA). Download-compress → recover → τ-step
+scan → upload-top-k → aggregation → local-buffer scatter is ONE jitted step
+with donated buffers, so XLA never round-trips the [P, n_params]
+intermediates; thresholds come from the O(n) histogram operators
+(``core.compression.fused_*``) behind a backend switch resolved once per
+simulation (DESIGN.md §3–4).
 """
 from __future__ import annotations
 
@@ -17,7 +28,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batchsize as BS
 from repro.core import caesar as CA
 from repro.core import compression as C
 from repro.data import partition, synthetic
@@ -43,6 +53,8 @@ class SimConfig:
     caesar: CA.CaesarConfig = dataclasses.field(default_factory=CA.CaesarConfig)
     sgd: SGD.SGDConfig = dataclasses.field(default_factory=SGD.SGDConfig)
     target_accuracy: Optional[float] = None
+    # compression-operator backend: auto | pallas | interpret | jnp
+    backend: str = "auto"
     # preliminary-study variants (Fig. 1): compress only one direction
     fic_down_only: bool = False
     fic_up_only: bool = False
@@ -57,6 +69,7 @@ class History:
     traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
     accuracy: list = dataclasses.field(default_factory=list)
     waiting: list = dataclasses.field(default_factory=list)       # per-round avg
+    wall: list = dataclasses.field(default_factory=list)          # host s/round
 
     def summary(self) -> dict:
         return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
@@ -77,6 +90,7 @@ class Simulator:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
+        self.backend = C.resolve_backend(cfg.backend)
         ds_fn = synthetic.DATASETS[cfg.dataset]
         self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
                           **(cfg.dataset_kwargs or {}))
@@ -87,7 +101,10 @@ class Simulator:
             feat_kw = {"n_features": self.data.x_train.shape[-1]}
         self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
                                n_classes=self.data.n_classes, **feat_kw)
-        self.model_bits = C.tree_payload_bits_dense(self.params0)
+        # flatten ONCE: the engine state is flat from here on
+        self.flat0, self.spec = C.flatten_tree(self.params0)
+        self.n_params = self.spec.n_params
+        self.model_bits = self.n_params * C.FULL_BITS
 
         self.splits, label_dist, volumes = partition.dirichlet_partition(
             self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
@@ -112,11 +129,18 @@ class Simulator:
         return BL.POLICIES[name]()
 
     # ------------------------------------------------------------------
-    # jitted kernels
+    # the fused round step (jitted once, donated buffers)
     # ------------------------------------------------------------------
     def _build_jits(self):
         cfg = self.cfg
         apply_fn = self.apply_fn
+        spec = self.spec
+        backend = self.backend
+        n_params = self.n_params
+        # scheme-level switches are fixed for the simulation → Python-level
+        # branches, not lax.cond: the compiled step contains only one path.
+        use_recovery = cfg.scheme == "caesar"
+        quantize = bool(getattr(self.policy, "quantize", False))
 
         def ce_loss(params, x, y, w):
             logits = apply_fn(params, x)
@@ -134,45 +158,66 @@ class Simulator:
             out, _ = jax.lax.scan(step, params, (xs, ys, ws, iter_mask))
             return out
 
-        def participant_round(global_p, local_p, xs, ys, ws, iter_mask, lr,
-                              theta_d, theta_u, use_recovery, quantize):
-            # --- download ---
-            flat_g, treedef, leaves = C._flatten(global_p)
-            flat_l, _, _ = C._flatten(local_p)
-            comp = C.hybrid_compress(flat_g, theta_d)
-            recovered = jax.lax.cond(
-                use_recovery,
-                lambda: C.hybrid_recover(comp, flat_l),
-                lambda: jnp.where(comp.mask, flat_l, comp.kept))  # plain stale sub
-            down_bits = comp.payload_bits()
-            w_init = C._unflatten(recovered, treedef, leaves)
-            # --- local training ---
-            w_fin = local_train(w_init, xs, ys, ws, iter_mask, lr)
-            flat_i, _, _ = C._flatten(w_init)
-            flat_f, _, _ = C._flatten(w_fin)
-            delta = flat_i - flat_f
+        def participant_round(global_f, g_cdf, g_max, local_f, xs, ys, ws,
+                              iter_mask, lr, theta_d, theta_u):
+            """One participant, entirely on flat [n_params] vectors."""
+            # --- download: per-device threshold is an O(1) lookup in the
+            # shared global-model cdf (one histogram per ROUND, not per device)
+            thr_d = C.threshold_from_cdf(g_cdf, g_max, theta_d)
+            kept, sign, cnt, ssum, smax = C.fused_compress(global_f, thr_d,
+                                                           backend)
+            mean_abs = ssum / jnp.maximum(cnt, 1)
+            # wire-format convention (kernels/ref.py): sign==0 marks a
+            # full-precision slot. An exact-zero compressed weight therefore
+            # arrives as its true value 0 (not the stale local) — a
+            # zero-deviation difference from the pytree engine's mask form.
+            if use_recovery:
+                w_init = C.fused_recover(kept, sign, local_f, mean_abs, smax,
+                                         backend)
+            else:   # plain stale substitution on the compressed slots
+                w_init = jnp.where(sign != 0, local_f, kept)
+            down_bits = C.hybrid_payload_bits(n_params, cnt)
+            # --- local training (pytree exists only inside apply_fn)
+            w_fin = local_train(C.unflatten_vector(w_init, spec),
+                                xs, ys, ws, iter_mask, lr)
+            flat_fin = C.flatten_vector(w_fin, spec)
+            delta = w_init - flat_fin
             gnorm = jnp.linalg.norm(delta)
-            # --- upload ---
-            def topk():
-                sp, bits = C.topk_sparsify(delta, theta_u)
-                return sp, bits.astype(jnp.float32)
-            def quant():   # ProWD-style: 1-bit masked elements, sign·mean
-                cc = C.hybrid_compress(delta, theta_u)
-                approx = jnp.where(cc.mask,
-                                   cc.sign.astype(jnp.float32) * cc.mean_abs,
-                                   cc.kept)
-                return approx, cc.payload_bits().astype(jnp.float32)
-            up, up_bits = jax.lax.cond(quantize, quant, topk)
-            return (C._unflatten(up, treedef, leaves), w_fin, down_bits,
-                    up_bits, gnorm)
+            # --- upload
+            thr_u = C.fused_threshold(delta, theta_u, backend)
+            if quantize:   # ProWD-style: 1-bit masked elements, sign·mean
+                k2, s2, c2, ss2, mx2 = C.fused_compress(delta, thr_u, backend)
+                up = jnp.where(s2 != 0,
+                               s2.astype(jnp.float32)
+                               * (ss2 / jnp.maximum(c2, 1)), k2)
+                up_bits = C.hybrid_payload_bits(n_params, c2)
+            else:          # top-k sparsification
+                up, up_bits = C.topk_sparsify_at(delta, thr_u)
+            return up, flat_fin, down_bits, up_bits, gnorm
 
-        self._round_vmapped = jax.jit(jax.vmap(
-            participant_round,
-            in_axes=(None, 0, 0, 0, 0, 0, None, 0, 0, None, None)),
-            static_argnums=())
+        def round_step(global_f, local_buf, parts, xs, ys, ws, ims, lr,
+                       theta_d, theta_u):
+            """The whole round: compress→recover→train→upload→aggregate→
+            scatter, one jit, donated [n_params] + [n, n_params] buffers."""
+            g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
+            lp_sel = local_buf[parts]                       # [P, n_params]
+            ups, new_lp, down_bits, up_bits, gnorms = jax.vmap(
+                participant_round,
+                in_axes=(None, None, None, 0, 0, 0, 0, 0, None, 0, 0))(
+                global_f, g_cdf, g_max, lp_sel, xs, ys, ws, ims, lr,
+                theta_d, theta_u)
+            # aggregate (Algorithm 1 line 13) + in-place buffer updates
+            new_global = global_f - jnp.mean(ups, axis=0)
+            new_buf = local_buf.at[parts].set(new_lp)
+            return new_global, new_buf, down_bits, up_bits, gnorms
 
-        def evaluate(params, x, y):
-            logits = apply_fn(params, x)
+        # donating the global vector and the [n, n_params] local buffer lets
+        # XLA scatter the participants' rows in place instead of copying the
+        # whole buffer every round (~60ms/round at 100×164k on CPU)
+        self._round_step = jax.jit(round_step, donate_argnums=(0, 1))
+
+        def evaluate(flat_params, x, y):
+            logits = apply_fn(C.unflatten_vector(flat_params, spec), x)
             return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
         self._eval = jax.jit(evaluate)
@@ -201,25 +246,25 @@ class Simulator:
         n, b_max, tau = cfg.n_clients, ccfg.b_max, ccfg.tau
         n_part = max(1, int(round(cfg.participation * n)))
         hist = History()
-        global_p = self.params0
+        # fresh copies: the step donates its inputs, flat0 must stay intact
+        global_f = jnp.array(self.flat0, copy=True)
         # every client starts from w0 (never-participated ⇒ full-precision DL)
-        local_p = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
-                               self.params0)
+        local_buf = jnp.tile(self.flat0[None, :], (n, 1))
         cum_time, cum_bits = 0.0, 0.0
         is_caesar = cfg.scheme == "caesar"
-        quantize = bool(getattr(self.policy, "quantize", False))
 
         for t in range(1, cfg.rounds + 1):
+            wall0 = time.perf_counter()
             parts = self.rng.choice(n, n_part, replace=False)
             mu, bw_d, bw_u = self.cap.snapshot(t)
-            lr = float(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
+            lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
 
             if is_caesar:
-                plan = CA.plan_round(self.caesar_state, jnp.int32(t), ccfg,
-                                     jnp.asarray(bw_d, jnp.float32),
-                                     jnp.asarray(bw_u, jnp.float32),
-                                     jnp.asarray(mu, jnp.float32),
-                                     float(self.model_bits))
+                plan = CA.plan_round_jit(self.caesar_state, jnp.int32(t), ccfg,
+                                         jnp.asarray(bw_d, jnp.float32),
+                                         jnp.asarray(bw_u, jnp.float32),
+                                         jnp.asarray(mu, jnp.float32),
+                                         float(self.model_bits))
                 theta_d = np.asarray(plan.theta_d)[parts]
                 theta_u = np.asarray(plan.theta_u)[parts]
                 batch = np.asarray(plan.batch)[parts]
@@ -235,27 +280,20 @@ class Simulator:
 
             xs, ys, ws, ims = self._sample_batches(parts, batch, taus,
                                                    b_max, tau)
-            lp_sel = jax.tree.map(lambda a: a[parts], local_p)
-            ups, new_lp, down_bits, up_bits, gnorms = self._round_vmapped(
-                global_p, lp_sel, xs, ys, ws, ims, lr,
-                jnp.asarray(theta_d, jnp.float32),
-                jnp.asarray(theta_u, jnp.float32),
-                is_caesar, quantize)
-
-            # aggregate (Algorithm 1 line 13)
-            agg = jax.tree.map(lambda u: jnp.mean(u, axis=0), ups)
-            global_p = jax.tree.map(lambda g, a: g - a, global_p, agg)
-            local_p = jax.tree.map(
-                lambda all_, new: all_.at[parts].set(new), local_p, new_lp)
+            global_f, local_buf, down_bits, up_bits, gnorms = \
+                self._round_step(global_f, local_buf,
+                                 jnp.asarray(parts, jnp.int32),
+                                 xs, ys, ws, ims, lr,
+                                 jnp.asarray(theta_d, jnp.float32),
+                                 jnp.asarray(theta_u, jnp.float32))
             self.grad_norms[parts] = np.asarray(gnorms)
 
             if is_caesar:
                 mask = np.zeros(n, bool); mask[parts] = True
-                self.caesar_state = CA.post_round(
+                self.caesar_state = CA.post_round_jit(
                     self.caesar_state, jnp.asarray(mask), jnp.int32(t))
 
             # --- accounting (Eq. 7) ---
-            q = float(self.model_bits)
             down_b = np.asarray(down_bits, np.float64)
             up_b = np.asarray(up_bits, np.float64)
             times = (down_b / bw_d[parts] + up_b / bw_u[parts]
@@ -263,10 +301,13 @@ class Simulator:
             cum_time += float(times.max())
             cum_bits += float(down_b.sum() + up_b.sum())
             waiting = float(np.mean(times.max() - times))
+            # the np.asarray conversions above synced on the step outputs, so
+            # this is an honest per-round host wall-clock
+            hist.wall.append(time.perf_counter() - wall0)
 
             if t % cfg.eval_every == 0 or t == cfg.rounds:
                 ne = min(cfg.eval_samples, len(self.data.y_test))
-                acc = float(self._eval(global_p,
+                acc = float(self._eval(global_f,
                                        jnp.asarray(self.data.x_test[:ne]),
                                        jnp.asarray(self.data.y_test[:ne])))
                 hist.rounds.append(t)
@@ -280,4 +321,11 @@ class Simulator:
                 if (cfg.target_accuracy is not None
                         and acc >= cfg.target_accuracy):
                     break
+        self.global_flat = global_f          # expose final flat model
         return hist
+
+    # ------------------------------------------------------------------
+    def global_params(self) -> Any:
+        """Final global model as a pytree (unflatten only at the boundary)."""
+        flat = getattr(self, "global_flat", self.flat0)
+        return C.unflatten_vector(flat, self.spec)

@@ -32,8 +32,11 @@ def _compress_kernel(x_ref, thr_ref, kept_ref, sign_ref, part_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def hybrid_compress(x: jax.Array, thr: jax.Array, interpret: bool = True):
+def hybrid_compress(x: jax.Array, thr: jax.Array,
+                    interpret: bool | None = None):
     """Returns (kept, sign_i8, count, sum_abs, max_abs) — see ref.hybrid_compress."""
+    from repro.kernels.topk_threshold import _resolve_interpret
+    interpret = _resolve_interpret(interpret)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
     n = flat.shape[0]

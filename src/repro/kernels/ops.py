@@ -1,7 +1,11 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On CPU (this container) kernels run in interpret mode; on TPU they compile to
-Mosaic. ``interpret`` is resolved once at import from the default backend.
+``interpret`` resolves per call (default: compile to Mosaic on TPU, interpret
+elsewhere). Hot-path callers should not use these wrappers directly — the
+round engine goes through ``core.compression``'s ``fused_*`` operators, whose
+backend switch ("pallas" | "interpret" | "jnp", DESIGN.md §4) is resolved once
+per simulation and picks between these kernels and their pure-jnp twins in
+``kernels.ref``.
 """
 from __future__ import annotations
 
@@ -13,39 +17,45 @@ from repro.kernels import hybrid_compress as _hc
 from repro.kernels import recover as _rc
 from repro.kernels import topk_threshold as _tt
 
-INTERPRET = jax.default_backend() != "tpu"
 
-
-def topk_threshold(x: jax.Array, ratio: jax.Array) -> jax.Array:
+def topk_threshold(x: jax.Array, ratio: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
     """Magnitude threshold compressing ≈ratio·n smallest elements (O(n))."""
-    return _tt.threshold(x, ratio, interpret=INTERPRET)
+    return _tt.threshold(x, ratio, interpret=interpret)
 
 
-def magnitude_histogram(x: jax.Array, max_abs: jax.Array) -> jax.Array:
-    return _tt.magnitude_histogram(x, max_abs, interpret=INTERPRET)
+def magnitude_histogram(x: jax.Array, max_abs: jax.Array,
+                        interpret: bool | None = None) -> jax.Array:
+    return _tt.magnitude_histogram(x, max_abs, interpret=interpret)
 
 
-def hybrid_compress(x: jax.Array, thr: jax.Array):
+def hybrid_compress(x: jax.Array, thr: jax.Array,
+                    interpret: bool | None = None):
     """(kept, sign_i8, count, sum_abs, max_abs) — fused Fig.3 sender pass."""
-    return _hc.hybrid_compress(x, thr, interpret=INTERPRET)
+    return _hc.hybrid_compress(x, thr, interpret=interpret)
 
 
-def recover(kept, sign, local, mean_abs, max_abs):
+def recover(kept, sign, local, mean_abs, max_abs,
+            interpret: bool | None = None):
     """Fused Fig.3 receiver pass."""
     return _rc.recover(kept, sign, local, mean_abs, max_abs,
-                       interpret=INTERPRET)
+                       interpret=interpret)
 
 
-def hybrid_roundtrip(x: jax.Array, local: jax.Array, ratio: jax.Array):
+def hybrid_roundtrip(x: jax.Array, local: jax.Array, ratio: jax.Array,
+                     interpret: bool | None = None):
     """Kernel-path compress→recover (mirrors core.compression.hybrid_roundtrip)."""
-    thr = topk_threshold(x, ratio)
-    kept, sign, count, sum_abs, max_abs = hybrid_compress(x, thr)
+    thr = topk_threshold(x, ratio, interpret=interpret)
+    kept, sign, count, sum_abs, max_abs = hybrid_compress(x, thr,
+                                                          interpret=interpret)
     mean_abs = sum_abs / jnp.maximum(count, 1)
-    out = recover(kept, sign, local, mean_abs, max_abs)
+    out = recover(kept, sign, local, mean_abs, max_abs, interpret=interpret)
     bits = (x.size - count) * 32 + count * 1 + 64
     return out, bits
 
 
-def decode_attention(q, k, v, length, kv_block: int = _fa.KV_BLOCK):
-    return _fa.decode_attention(q, k, v, length, interpret=INTERPRET,
+def decode_attention(q, k, v, length, kv_block: int = _fa.KV_BLOCK,
+                     interpret: bool | None = None):
+    return _fa.decode_attention(q, k, v, length,
+                                interpret=_tt._resolve_interpret(interpret),
                                 kv_block=kv_block)

@@ -31,7 +31,9 @@ def _recover_kernel(kept_ref, sign_ref, local_ref, stats_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def recover(kept: jax.Array, sign: jax.Array, local: jax.Array,
             mean_abs: jax.Array, max_abs: jax.Array,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool | None = None) -> jax.Array:
+    from repro.kernels.topk_threshold import _resolve_interpret
+    interpret = _resolve_interpret(interpret)
     shape, dtype = local.shape, local.dtype
     n = kept.size
     n_blocks = -(-n // BLOCK)

@@ -18,13 +18,18 @@ def magnitude_histogram(x: jax.Array, n_bins: int, max_abs: jax.Array) -> jax.Ar
 
 def threshold_from_histogram(hist: jax.Array, max_abs: jax.Array,
                              ratio: jax.Array) -> jax.Array:
-    """Magnitude threshold below which ≈ratio·n elements fall (bin-quantized)."""
+    """Magnitude threshold below which ≈ratio·n elements fall (bin-quantized).
+
+    Lower-bin-edge convention: ratio=0 ⇒ thr=0 ⇒ strict ``|x| < thr``
+    compresses nothing, matching the exact-quantile operators; every ratio is
+    within one bin width of ``jnp.quantile(|x|, ratio)``.
+    """
     n_bins = hist.shape[0]
     cdf = jnp.cumsum(hist)
-    target = ratio * cdf[-1]
+    target = jnp.clip(ratio, 0.0, 1.0) * cdf[-1]
     bin_idx = jnp.searchsorted(cdf, target, side="left")
     width = jnp.maximum(max_abs, 1e-30) / n_bins
-    return (bin_idx.astype(jnp.float32) + 1.0) * width
+    return bin_idx.astype(jnp.float32) * width
 
 
 def hybrid_compress(x: jax.Array, thr: jax.Array):

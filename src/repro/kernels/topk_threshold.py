@@ -5,6 +5,12 @@ threshold by sort is O(n log n) and HBM-traffic heavy; this kernel computes a
 256-bin histogram of |x|/max in one HBM pass (8×128-aligned VMEM tiles), from
 which the host-side (jnp) cumsum picks the bin edge at the target sparsity.
 
+The selected edge is the LOWER edge of the bin whose cdf first reaches
+ratio·n: compression masks use strict ``|x| < thr``, so the lower edge keeps
+ratio=0 exactly lossless (thr=0) and matches
+``core.compression.magnitude_threshold``'s strict-< semantics to within one
+bin width at every ratio.
+
 Scatter is not VPU-friendly, so binning is done as a one-hot compare + matmul
 reduction (MXU does the [block × bins] contraction).
 """
@@ -18,6 +24,11 @@ from jax.experimental import pallas as pl
 
 BLOCK = 8 * 128          # one VMEM tile row-group (f32 sublane×lane alignment)
 N_BINS = 256
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """None → compile on TPU, interpret elsewhere (resolved per call site)."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 def _hist_kernel(x_ref, scale_ref, hist_ref):
@@ -39,9 +50,10 @@ def _hist_kernel(x_ref, scale_ref, hist_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def magnitude_histogram(x: jax.Array, max_abs: jax.Array,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """256-bin histogram of |x| over [0, max_abs]. Pads with sentinel bin-0
     entries that are subtracted afterwards."""
+    interpret = _resolve_interpret(interpret)
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     n_blocks = -(-n // BLOCK)
@@ -66,12 +78,14 @@ def magnitude_histogram(x: jax.Array, max_abs: jax.Array,
 
 
 def threshold(x: jax.Array, ratio: jax.Array, *,
-              interpret: bool = True) -> jax.Array:
-    """Full two-pass threshold: max-reduce (XLA) + histogram (Pallas) + cdf."""
+              interpret: bool | None = None) -> jax.Array:
+    """Full two-pass threshold: max-reduce (XLA) + histogram (Pallas) + cdf.
+
+    Returns the LOWER edge of the bin whose cdf first reaches ratio·n, so
+    ratio=0 yields thr=0 (strict ``|x| < thr`` compresses nothing) and the
+    result is within one bin width of ``jnp.quantile(|x|, ratio)``.
+    """
+    from repro.kernels import ref
     max_abs = jnp.max(jnp.abs(x))
     hist = magnitude_histogram(x, max_abs, interpret=interpret)
-    cdf = jnp.cumsum(hist)
-    target = ratio * cdf[-1]
-    bin_idx = jnp.searchsorted(cdf, target, side="left")
-    width = jnp.maximum(max_abs, 1e-30) / N_BINS
-    return (bin_idx.astype(jnp.float32) + 1.0) * width
+    return ref.threshold_from_histogram(hist, max_abs, ratio)

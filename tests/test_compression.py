@@ -1,10 +1,14 @@
 """Unit + property tests for the Caesar compression operators (paper §4.1/4.2)."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis.extra import numpy as hnp
 

@@ -21,6 +21,17 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 
 
+# the mesh-based tests drive model-internal jax.shard_map(ambient-mesh) calls
+# that only exist in newer jax; on older releases they skip (the meshless
+# cohort-round tests below still cover the full Caesar compression path)
+NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def _mesh_ctx(mesh):
+    """jax.set_mesh on new jax; the Mesh context manager on older releases."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 def _smoke_setup(arch="qwen1p5_4b", tau=2):
     cfg = dataclasses.replace(configs.get(arch).smoke(), local_iters=tau)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -85,12 +96,14 @@ def test_error_feedback_accumulates():
     assert ef_norm > 0  # dropped 90% of delta went into the EF buffer
 
 
+@pytest.mark.skipif(not NEW_SHARD_MAP,
+                    reason="needs jax.shard_map ambient-mesh API")
 def test_local_mesh_train_step():
     """Same step under a (1,1) mesh exercises shard_map/spec code paths."""
     mesh = make_local_mesh()
     cfg, params, batch = _smoke_setup()
     dcfg = D.DistConfig()
-    with jax.set_mesh(mesh):
+    with _mesh_ctx(mesh):
         state = D.init_state(params, dcfg, mesh)
         step = D.make_train_step(cfg, dcfg, mesh)
         state2, m = jax.jit(step)(state, batch)
@@ -113,7 +126,8 @@ _SUBPROC = textwrap.dedent("""
     toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
     batch = {"tokens": toks, "labels": toks}
     dcfg = D.DistConfig(theta_d=0.3, theta_u=0.4)
-    with jax.set_mesh(mesh):
+    mesh_ctx = (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh)
+    with mesh_ctx:
         state = D.init_state(params, dcfg, mesh)
         step = D.make_train_step(cfg, dcfg, mesh)
         state2, m = jax.jit(step)(state, batch)
@@ -131,6 +145,8 @@ _SUBPROC = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(not NEW_SHARD_MAP,
+                    reason="needs jax.shard_map ambient-mesh API")
 def test_multipod_execution_subprocess():
     """Real 2-pod execution (8 host devices): pods act as distinct clients."""
     r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,

@@ -1,0 +1,220 @@
+"""Fused flat-engine pipeline vs reference operators.
+
+Covers the DESIGN.md §3–4 contracts:
+  * histogram/bisection threshold parity with the exact quantile (within one
+    bin width, including the ratio=0 strict-< losslessness fix),
+  * element-wise equivalence of the fused compress/recover/top-k pipeline
+    against kernels/ref.py and the pure-jnp operators in core/compression.py
+    (exact at equal thresholds; bin-quantized when each side picks its own),
+  * +inf-padding hygiene and mask/payload-bit accounting on non-tile-aligned
+    sizes,
+  * flat-parameter spec round-tripping.
+
+Deliberately plain pytest (no hypothesis) so the suite exercises these even
+in a bare environment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.kernels import ops, ref
+
+RATIOS = [0.0, 0.3, 0.9, 1.0]
+# 5000 is deliberately not a multiple of the 1024-lane kernel BLOCK → the
+# Pallas paths pad with +inf (compress) / zeros (histogram sentinel bin)
+SIZES = [1000, 5000]
+
+
+def _rand(n=5000, seed=0, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# Threshold parity (satellite: ratio-0 strict-< semantics fix)
+# ---------------------------------------------------------------------------
+
+class TestThresholdParity:
+    @pytest.mark.parametrize("ratio", RATIOS)
+    @pytest.mark.parametrize("n", SIZES)
+    def test_kernel_threshold_within_one_bin_of_quantile(self, ratio, n):
+        x = _rand(n)
+        thr = float(ops.topk_threshold(x, jnp.float32(ratio), interpret=True))
+        q = float(jnp.quantile(jnp.abs(x), ratio))
+        bin_w = float(jnp.max(jnp.abs(x))) / 256.0
+        assert abs(thr - q) <= bin_w + 1e-6
+
+    @pytest.mark.parametrize("ratio", RATIOS)
+    def test_jnp_threshold_within_one_bin_of_quantile(self, ratio):
+        x = _rand()
+        thr = float(C.fused_threshold(x, jnp.float32(ratio), "jnp"))
+        q = float(jnp.quantile(jnp.abs(x), ratio))
+        bin_w = float(jnp.max(jnp.abs(x))) / 256.0
+        assert abs(thr - q) <= bin_w + 1e-6
+
+    @pytest.mark.parametrize("ratio", RATIOS + [0.5, 0.123])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_bisection_equals_histogram_exactly(self, ratio, seed):
+        """The scatter-free bisection is the same function as hist+searchsorted."""
+        x = _rand(seed=seed)
+        via_bisect = float(C._bisect_threshold(x, jnp.float32(ratio)))
+        mx = jnp.max(jnp.abs(x))
+        hist = ref.magnitude_histogram(x, C.N_BINS, mx)
+        via_hist = float(ref.threshold_from_histogram(hist, mx,
+                                                      jnp.float32(ratio)))
+        assert via_bisect == pytest.approx(via_hist, abs=1e-7)
+
+    @pytest.mark.parametrize("backend", ["jnp", "interpret"])
+    def test_ratio_zero_compresses_nothing(self, backend):
+        """Lower-bin-edge fix: θ=0 must be exactly lossless under strict <."""
+        x = _rand()
+        thr = C.fused_threshold(x, jnp.float32(0.0), backend)
+        assert float(thr) == 0.0
+        assert int(jnp.sum(jnp.abs(x) < thr)) == 0
+
+    def test_ratio_one_keeps_max_element(self):
+        x = _rand()
+        thr = C.fused_threshold(x, jnp.float32(1.0), "jnp")
+        assert float(thr) < float(jnp.max(jnp.abs(x)))  # strict < keeps max
+
+
+# ---------------------------------------------------------------------------
+# Fused compress/recover vs reference (satellite: fused-vs-ref equivalence)
+# ---------------------------------------------------------------------------
+
+class TestFusedVsReference:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_kernel_compress_matches_ref_at_equal_threshold(self, n):
+        """+inf padding must not leak into kept/sign/count/sum/max."""
+        x = _rand(n, seed=3)
+        thr = jnp.float32(1.0)
+        k_k, s_k, c_k, sum_k, max_k = C.fused_compress(x, thr, "interpret")
+        k_r, s_r, c_r, sum_r, max_r = ref.hybrid_compress(x, thr)
+        np.testing.assert_allclose(np.asarray(k_k), np.asarray(k_r),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        assert int(c_k) == int(c_r)
+        np.testing.assert_allclose(float(sum_k), float(sum_r), rtol=1e-4)
+        np.testing.assert_allclose(float(max_k), float(max_r), rtol=1e-6)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_ref_compress_matches_core_at_equal_threshold(self, n):
+        """ref (fused twin) == core HybridCompressed semantics, same thr."""
+        x = _rand(n, seed=4)
+        thr = jnp.float32(0.8)
+        kept, sign, cnt, ssum, smax = ref.hybrid_compress(x, thr)
+        mask = jnp.abs(x) < thr
+        c = C.HybridCompressed(
+            kept=jnp.where(mask, 0.0, x), sign=jnp.where(
+                mask, jnp.sign(x), 0.0).astype(jnp.int8),
+            mean_abs=ssum / jnp.maximum(cnt, 1), max_abs=smax, mask=mask)
+        np.testing.assert_allclose(np.asarray(kept), np.asarray(c.kept),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(sign), np.asarray(c.sign))
+        # mask/payload accounting: sign!=0 is the wire mask
+        assert int(jnp.sum(sign != 0)) == int(jnp.sum(mask)) == int(cnt)
+        np.testing.assert_allclose(
+            float(C.hybrid_payload_bits(x.size, cnt)),
+            float(c.payload_bits()), rtol=1e-6)
+
+    @pytest.mark.parametrize("backend", ["jnp", "interpret"])
+    @pytest.mark.parametrize("ratio", [0.0, 0.3, 0.9])
+    def test_fused_roundtrip_close_to_exact_quantile_roundtrip(self, backend,
+                                                               ratio):
+        """End-to-end fused pipeline == core pipeline up to threshold
+        bin-quantization. Slots kept by both pass through exactly; slots
+        compressed by both recover either the local value (exact match) or
+        the sign·mean fallback, whose two means differ by at most the bin-
+        quantization shift of the compressed set."""
+        x = _rand(seed=5)
+        local = x + 0.1 * _rand(seed=6, scale=1.0)
+        rec_f, bits_f = C.fused_hybrid_roundtrip(x, local, jnp.float32(ratio),
+                                                 backend)
+        rec_c, bits_c = C.hybrid_roundtrip(x, local, jnp.float32(ratio))
+        thr_f = C.fused_threshold(x, jnp.float32(ratio), backend)
+        thr_c = C.magnitude_threshold(x, jnp.float32(ratio))
+        bin_w = float(jnp.max(jnp.abs(x))) / C.N_BINS
+
+        def stats(thr):
+            m = jnp.abs(x) < thr
+            cnt = jnp.maximum(jnp.sum(m), 1)
+            return (float(jnp.sum(jnp.where(m, jnp.abs(x), 0.0)) / cnt),
+                    float(jnp.max(jnp.where(m, jnp.abs(x), 0.0))))
+
+        mean_f, max_f = stats(thr_f)
+        mean_c, max_c = stats(thr_c)
+        assert abs(mean_f - mean_c) <= 2 * bin_w + 1e-6
+
+        ax, al = np.abs(np.asarray(x)), np.asarray(local)
+        rec_f, rec_c = np.asarray(rec_f), np.asarray(rec_c)
+        both_keep = (ax >= float(thr_f)) & (ax >= float(thr_c))
+        both_comp = (ax < float(thr_f)) & (ax < float(thr_c))
+        np.testing.assert_allclose(rec_f[both_keep], rec_c[both_keep],
+                                   rtol=1e-6)
+        sgn_agree = np.sign(al) * np.sign(np.asarray(x)) >= 0
+        local_ok = np.abs(al) <= min(max_f, max_c)
+        exact = both_comp & sgn_agree & local_ok
+        np.testing.assert_allclose(rec_f[exact], rec_c[exact], rtol=1e-6)
+        fallback = both_comp & (~sgn_agree | (np.abs(al)
+                                              > max(max_f, max_c)))
+        np.testing.assert_allclose(rec_f[fallback], rec_c[fallback],
+                                   atol=abs(mean_f - mean_c) + 1e-6)
+        # payload bits agree to the threshold-band population (31 bits/slot)
+        band = int(np.sum((ax < max(float(thr_f), float(thr_c)))
+                          & (ax >= min(float(thr_f), float(thr_c)))))
+        assert abs(float(bits_f) - float(bits_c)) <= band * 31 + 1e-6
+
+    @pytest.mark.parametrize("backend", ["jnp", "interpret"])
+    def test_fused_topk_matches_ref_sparsify(self, backend):
+        g = _rand(seed=7)
+        ratio = jnp.float32(0.4)
+        sparse, bits = C.fused_topk(g, ratio, backend)
+        thr = C.fused_threshold(g, ratio, backend)
+        np.testing.assert_allclose(
+            np.asarray(sparse), np.asarray(ref.topk_sparsify(g, thr)),
+            rtol=1e-6)
+        n_keep = int(jnp.sum(jnp.abs(g) >= thr))
+        assert float(bits) == pytest.approx(
+            n_keep * (C.FULL_BITS + C.INDEX_BITS))
+
+    def test_fused_recover_matches_ref(self):
+        x = _rand(seed=8)
+        local = x + 0.2 * _rand(seed=9, scale=1.0)
+        kept, sign, cnt, ssum, smax = ref.hybrid_compress(x, jnp.float32(1.2))
+        mean = ssum / jnp.maximum(cnt, 1)
+        out_i = C.fused_recover(kept, sign, local, mean, smax, "interpret")
+        out_j = C.fused_recover(kept, sign, local, mean, smax, "jnp")
+        np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_j),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter spec (engine state representation)
+# ---------------------------------------------------------------------------
+
+class TestFlatSpec:
+    def test_roundtrip_preserves_tree(self):
+        tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "blocks": [{"c": jnp.ones((2, 2, 2), jnp.float32)},
+                           {"c": jnp.full((5,), 2.0)}],
+                "b": jnp.zeros(3, jnp.float32)}
+        flat, spec = C.flatten_tree(tree)
+        assert flat.shape == (12 + 8 + 5 + 3,)
+        back = C.unflatten_vector(flat, spec)
+        assert jax.tree.structure(back) == jax.tree.structure(tree)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), back,
+                     tree)
+
+    def test_flatten_vector_matches_initial_flatten(self):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32),
+                "b": jnp.ones((2, 3), jnp.float32)}
+        flat, spec = C.flatten_tree(tree)
+        np.testing.assert_allclose(np.asarray(C.flatten_vector(tree, spec)),
+                                   np.asarray(flat))
+
+    def test_backend_resolution(self):
+        assert C.resolve_backend("jnp") == "jnp"
+        assert C.resolve_backend("auto") in C.BACKENDS
+        with pytest.raises(ValueError):
+            C.resolve_backend("cuda")

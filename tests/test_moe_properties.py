@@ -1,4 +1,9 @@
 """Property-based tests for the MoE dispatch invariants (hypothesis)."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 import hypothesis
 import hypothesis.strategies as st
 import jax

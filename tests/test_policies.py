@@ -1,4 +1,9 @@
 """Eq. 3/4/5/6/9 policy-layer tests (staleness, importance, batch size)."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
