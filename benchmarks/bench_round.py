@@ -38,10 +38,14 @@ ROOT = Path(__file__).resolve().parent.parent
 
 
 def bench_config(tau: int, n_clients: int, rounds: int) -> SimConfig:
+    # plan_scope="all" pins the PLANNING layer to what LegacyEngine below
+    # computes (plan_round without a participant mask), so the seed-vs-fused
+    # comparison isolates the execution engine — not the PR-2 planner fix
     return SimConfig(dataset="har", scheme="caesar", n_clients=n_clients,
                      participation=0.1, rounds=rounds, data_scale=0.25,
                      eval_every=10 ** 6,   # final-round eval only
-                     caesar=CaesarConfig(tau=tau, b_max=16))
+                     caesar=CaesarConfig(tau=tau, b_max=16,
+                                         plan_scope="all"))
 
 
 # ---------------------------------------------------------------------------
@@ -209,17 +213,17 @@ def bench_engines(tau: int, n_clients: int, rounds: int) -> dict:
     # one-time and identical-by-construction between them)
     sim = Simulator(cfg)
     t0 = time.perf_counter()
-    h = sim.run()                    # per-round walls land in History.wall
+    h = sim.run()         # raw per-round walls land in History.wall_per_round
     fused_e2e = time.perf_counter() - t0
     leg = LegacyEngine(cfg)          # seed engine on identical data/seeds
     t0 = time.perf_counter()
     walls, tree = leg.run()
     seed_e2e = time.perf_counter() - t0
     seed_acc = leg.final_accuracy(tree, cfg.eval_samples)
-    # History.wall samples are captured before the eval block, so both
+    # wall_per_round samples are captured before the eval block, so both
     # engines' medians run over the same per-round population
     seed_ms = _median_steady(walls) * 1e3
-    fused_ms = _median_steady(h.wall) * 1e3
+    fused_ms = _median_steady(h.wall_per_round) * 1e3
     return {
         "tau": tau, "n_clients": n_clients, "rounds": rounds,
         "n_params": sim.n_params, "backend": sim.backend,

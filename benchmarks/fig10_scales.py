@@ -1,13 +1,37 @@
-"""Paper Fig. 10 / §6.5: scalability across device counts (scaled for CPU)."""
+"""Paper Fig. 10 / §6.5: scalability across device counts.
+
+Two studies live here:
+
+* ``run()`` — the paper-figure reproduction (30/60/100 clients, CPU budget),
+  unchanged CSV/JSON conventions.
+* the **round-engine scale study** (``--scale`` / ``--smoke``) — 500/1000/
+  2000-client cohorts through the chunked/sharded engine (DESIGN.md §7),
+  emitting ``BENCH_scale.json`` with peak host memory and s/round per scale
+  point plus chunked-vs-unchunked same-seed trajectory parity. Every point
+  runs in a **fresh subprocess** so ``ru_maxrss`` (a process-lifetime
+  high-water mark) is a clean per-point measurement; the sharded point
+  forces a multi-device host platform via XLA_FLAGS.
+"""
 from __future__ import annotations
 
-from benchmarks import common as CM
+import argparse
+import json
+import os
+import resource
+import statistics
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
 
 SCALES = [30, 60, 100]
 SCHEMES = ["fedavg", "caesar"]
 
 
 def run(dataset="har", log=lambda s: None):
+    from benchmarks import common as CM
     out = {}
     for n in SCALES:
         for scheme in SCHEMES:
@@ -25,5 +49,138 @@ def run(dataset="har", log=lambda s: None):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Round-engine scale study (BENCH_scale.json)
+# ---------------------------------------------------------------------------
+
+def run_point(n_clients: int, chunk_size, rounds: int,
+              participation: float = 0.1, sharded: bool = False,
+              seed: int = 0, data_scale: float = 1.0, tau: int = 2) -> dict:
+    """One scale point, measured in THIS process (run it in a fresh
+    subprocess for a clean ru_maxrss high-water mark). Evaluates EVERY
+    round so the recorded accuracy list is a genuine trajectory (the
+    chunked-vs-unchunked parity check compares all of it, not just the
+    final point)."""
+    from repro.core.caesar import CaesarConfig
+    from repro.fl.simulation import SimConfig, Simulator
+    cfg = SimConfig(dataset="har", scheme="caesar", n_clients=n_clients,
+                    participation=participation, rounds=rounds,
+                    data_scale=data_scale, eval_every=1, seed=seed,
+                    caesar=CaesarConfig(tau=tau, b_max=16),
+                    chunk_size=chunk_size, sharded=sharded)
+    t0 = time.perf_counter()
+    sim = Simulator(cfg)
+    h = sim.run()
+    wall = time.perf_counter() - t0
+    walls = h.wall_per_round[1:] if len(h.wall_per_round) > 1 \
+        else h.wall_per_round
+    return {
+        "n_clients": n_clients, "participants": sim.n_part,
+        "chunk_size": chunk_size, "sharded": sharded, "n_dev": sim.n_dev,
+        "rounds": rounds, "n_params": sim.n_params,
+        "s_per_round": statistics.median(walls),
+        # ru_maxrss is KB on Linux
+        "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        / 1024.0,
+        "local_buf_mb": sim.n_params * n_clients * 4 / 2 ** 20,
+        "accuracy": h.accuracy,
+        "final_acc": h.accuracy[-1],
+        "traffic_gb": h.traffic_bits[-1] / 8e9,
+        "avg_waiting_s": h.waiting[-1],
+        "wall_s": wall,
+    }
+
+
+def _subprocess_point(extra_env=None, **kw) -> dict:
+    """Run one point in a fresh interpreter; parse its JSON tail line."""
+    cmd = [sys.executable, str(Path(__file__).resolve()),
+           "--point", json.dumps(kw)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.update(extra_env or {})
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=3600,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"scale point {kw} failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _parity(a: dict, b: dict) -> dict:
+    """Same-seed trajectory agreement between two points."""
+    diffs = [abs(x - y) for x, y in zip(a["accuracy"], b["accuracy"])]
+    return {"max_acc_diff": max(diffs),
+            "traffic_rel_diff": abs(a["traffic_gb"] - b["traffic_gb"])
+            / max(a["traffic_gb"], 1e-12)}
+
+
+def scale_bench(smoke: bool = False) -> dict:
+    results: dict = {"config": {"smoke": smoke, "dataset": "har"}}
+    if smoke:   # CI: one small chunked/unchunked pair, 2 rounds
+        base = dict(rounds=2, participation=0.2, data_scale=0.25, tau=1)
+        unchunked = _subprocess_point(n_clients=60, chunk_size=None, **base)
+        chunked = _subprocess_point(n_clients=60, chunk_size=4, **base)
+        points = [unchunked, chunked]
+    else:
+        # Fig.-10-style 500/1000/2000 scale sweep (10% participation), plus
+        # a DENSE 1000-client cohort (50% participation ⇒ P=500) measured
+        # unchunked AND chunked: at P=500 the [P, n_params] round
+        # intermediates (~4×330 MB) dominate the process baseline, so the
+        # peak-RSS delta isolates exactly what chunking bounds. The
+        # [n, n_params] local buffer is O(n) by design and reported
+        # separately as local_buf_mb.
+        base = dict(rounds=4, participation=0.1)
+        dense = dict(rounds=3, participation=0.5, n_clients=1000)
+        unchunked = _subprocess_point(chunk_size=None, **dense)
+        chunked = _subprocess_point(chunk_size=25, **dense)
+        points = [
+            _subprocess_point(n_clients=500, chunk_size=25, **base),
+            _subprocess_point(n_clients=1000, chunk_size=25, **base),
+            _subprocess_point(n_clients=2000, chunk_size=25, **base),
+            unchunked, chunked,
+            # sharded: same 1000-client cohort over 4 forced host devices
+            _subprocess_point(
+                n_clients=1000, chunk_size=25, sharded=True,
+                extra_env={"XLA_FLAGS":
+                           "--xla_force_host_platform_device_count=4"},
+                **base),
+        ]
+    for p in points:
+        tag = (f"n{p['n_clients']}/P{p['participants']}/"
+               f"{'chunk' + str(p['chunk_size']) if p['chunk_size'] else 'unchunked'}"
+               + ("/sharded" if p["sharded"] else ""))
+        print(f"fig10_scale/{tag},{p['s_per_round'] * 1e6:.0f},"
+              f"peak_rss_mb={p['peak_rss_mb']:.0f};"
+              f"acc={p['final_acc']:.3f};wait_s={p['avg_waiting_s']:.1f}")
+    results["points"] = points
+    results["parity_chunked_vs_unchunked"] = _parity(unchunked, chunked)
+    payload = json.dumps(results, indent=1, default=float)
+    name = "BENCH_scale_smoke.json" if smoke else "BENCH_scale.json"
+    (ROOT / name).write_text(payload)
+    out2 = ROOT / "experiments" / "bench"
+    out2.mkdir(parents=True, exist_ok=True)
+    (out2 / name).write_text(payload)
+    print(f"wrote {name}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", action="store_true",
+                    help="run the 500/1000/2000-client engine scale study")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale study for CI")
+    ap.add_argument("--point", type=str, default=None,
+                    help="(internal) run one scale point from a JSON spec "
+                         "and print the result JSON")
+    args = ap.parse_args()
+    if args.point is not None:
+        print(json.dumps(run_point(**json.loads(args.point)), default=float))
+    elif args.scale or args.smoke:
+        scale_bench(smoke=args.smoke)
+    else:
+        run(log=print)
+
+
 if __name__ == "__main__":
-    run(log=print)
+    main()

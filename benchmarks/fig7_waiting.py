@@ -1,8 +1,6 @@
 """Paper Fig. 7: average synchronous-barrier waiting time per scheme."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common as CM
 
 SCHEMES = ["fedavg", "flexcom", "prowd", "pyramidfl", "caesar"]
@@ -12,7 +10,10 @@ def run(dataset="har", log=lambda s: None):
     out = {}
     for scheme in SCHEMES:
         h, wall = CM.run_sim(CM.sim_config(dataset, scheme), log)
-        w = float(np.mean(h.waiting))
+        # History.waiting is the running per-round mean — the last entry
+        # already averages EVERY simulated round, not a 1-in-eval_every
+        # subsample
+        w = float(h.waiting[-1])
         out[scheme] = w
         CM.csv_row(f"fig7/{scheme}", wall / max(len(h.rounds), 1) * 1e6,
                    f"avg_wait_s={w:.2f}")

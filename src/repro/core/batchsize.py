@@ -26,12 +26,23 @@ def round_times(theta_d: jax.Array, theta_u: jax.Array, q_bits: float,
 
 def optimize_batch_sizes(theta_d: jax.Array, theta_u: jax.Array, q_bits: float,
                          bw_down: jax.Array, bw_up: jax.Array, tau: int,
-                         mu: jax.Array, b_max: int,
-                         b_min: int = 1) -> tuple[jax.Array, jax.Array]:
-    """Eqs. 8–9. Returns (batch_sizes [n] int32, leader index scalar)."""
+                         mu: jax.Array, b_max: int, b_min: int = 1,
+                         mask: jax.Array | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Eqs. 8–9. Returns (batch_sizes [n] int32, leader index scalar).
+
+    ``mask`` ([n] bool, optional) scopes the Eq.-8 argmin to the round's
+    participant set N^t: the leader must be a device that actually runs this
+    round, otherwise everyone equalizes against a phantom barrier no
+    participant can meet and the fastest participant never gets b_max.
+    Batch sizes are still emitted for all n devices (callers index by
+    participant); masked-out entries are sized against the participant
+    leader and carry no meaning.
+    """
     comm = theta_d * (q_bits / bw_down) + theta_u * (q_bits / bw_up)
     full_time = comm + tau * float(b_max) * mu          # Eq. 8 objective
-    leader = jnp.argmin(full_time)
+    cand = full_time if mask is None else jnp.where(mask, full_time, jnp.inf)
+    leader = jnp.argmin(cand)
     m_leader = full_time[leader]
     b = jnp.floor((m_leader - comm) / (tau * mu))        # Eq. 9
     b = jnp.clip(b, b_min, b_max).astype(jnp.int32)

@@ -32,6 +32,11 @@ class CaesarConfig:
     use_error_feedback: bool = False   # beyond-paper toggle (off = faithful)
     use_batch_opt: bool = True         # §4.3 on/off (off = Caesar-DC ablation)
     use_deviation_compress: bool = True  # §4.1+4.2 on/off (off = Caesar-BR)
+    # planning scope: "participants" (paper: Eq. 8–9 leader and §4.1 clusters
+    # over N^t) | "all" (leader/clusters over every device, kept for A/B
+    # measurement of the scoping alone — the δ=t clamp and histogram-edge
+    # quantiles apply in both scopes)
+    plan_scope: str = "participants"
 
 
 @jax.tree_util.register_dataclass
@@ -63,13 +68,22 @@ class RoundPlan:
 
 def plan_round(state: CaesarState, t: jax.Array, cfg: CaesarConfig,
                bw_down: jax.Array, bw_up: jax.Array, mu: jax.Array,
-               q_bits: float) -> RoundPlan:
-    """Algorithm 1 lines 8–10 for all devices (callers mask to participants)."""
+               q_bits: float,
+               participants: Any = None) -> RoundPlan:
+    """Algorithm 1 lines 8–10. Emits [n] plan arrays (callers index by
+    participant), but the plan itself is **participant-scoped** when
+    ``participants`` ([n] bool mask = N^t) is given: §4.1 staleness clusters
+    are built over the participant set and the Eq. 8–9 leader is the fastest
+    *participant* — an absent global leader must not set the barrier.
+    ``participants=None`` plans over all devices (selected by
+    ``cfg.plan_scope == "all"`` in the round engine for A/B measurement of
+    the scoping alone)."""
     delta = st.staleness(state.last_round, t)
     if cfg.use_deviation_compress:
         if cfg.n_clusters > 0:
             cid, theta_d = st.cluster_ratios(delta, t, cfg.theta_d_max,
-                                             cfg.n_clusters)
+                                             cfg.n_clusters,
+                                             mask=participants)
         else:
             theta_d = st.download_ratio(delta, t, cfg.theta_d_max)
             cid = jnp.arange(delta.shape[0], dtype=jnp.int32)
@@ -83,7 +97,7 @@ def plan_round(state: CaesarState, t: jax.Array, cfg: CaesarConfig,
     if cfg.use_batch_opt:
         batch, _ = bs.optimize_batch_sizes(theta_d, theta_u, q_bits, bw_down,
                                            bw_up, cfg.tau, mu, cfg.b_max,
-                                           cfg.b_min)
+                                           cfg.b_min, mask=participants)
     else:  # Caesar-DC ablation: identical fixed batch size
         batch = jnp.full(delta.shape[0], cfg.b_max, jnp.int32)
     return RoundPlan(theta_d=theta_d, theta_u=theta_u, batch=batch,

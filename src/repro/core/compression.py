@@ -221,6 +221,23 @@ def unflatten_vector(flat: jax.Array, spec: FlatSpec) -> Pytree:
     return jax.tree_util.tree_unflatten(spec.treedef, out)
 
 
+def chunk_layout(n_items: int, chunk: int | None
+                 ) -> tuple[int, int, int]:
+    """(chunk, n_padded, n_chunks) for fixed-size chunking of ``n_items``.
+
+    The chunked round engine (fl/simulation.py, DESIGN.md §7) processes
+    participants in chunks of ``chunk`` via a lax.scan so the [P, n_params]
+    compress/recover/train intermediates are bounded by chunk × n_params.
+    ``chunk`` is clamped to [1, n_items]; None/0 means one chunk of all
+    items. The trailing partial chunk is padded (padded rows carry a zero
+    mask and an out-of-range scatter index, so they never touch the
+    buffers).
+    """
+    chunk = max(1, min(chunk, n_items) if chunk else n_items)
+    n_chunks = -(-n_items // chunk)
+    return chunk, n_chunks * chunk, n_chunks
+
+
 def tree_hybrid_roundtrip(tree: Pytree, local_tree: Pytree,
                           ratio: jax.Array) -> tuple[Pytree, jax.Array]:
     """Whole-model download compression with a single global threshold.

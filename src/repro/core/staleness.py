@@ -34,22 +34,44 @@ def update_participation(last_round: jax.Array, participants: jax.Array,
 # Cluster-based grouping (§4.1): the PS compresses K times, not |N^t| times.
 # 1-D staleness ⇒ quantile-bucket clustering is the natural (and jit-friendly)
 # choice; devices in a bucket share the bucket's mean-staleness ratio.
+# The paper builds the clusters over the ROUND'S PARTICIPANTS N^t — pass
+# ``mask`` to scope the quantile edges and bucket means to the participant
+# set (non-participants still get a cid/ratio, but it is never consumed).
 # ---------------------------------------------------------------------------
 
 def cluster_ratios(delta: jax.Array, t: jax.Array, theta_d_max: float,
-                   n_clusters: int) -> tuple[jax.Array, jax.Array]:
+                   n_clusters: int,
+                   mask: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
     """Group by staleness into ``n_clusters`` quantile buckets.
 
     Returns (cluster_id [n], ratio_per_device [n]) where every device in a
     cluster gets the ratio computed from the cluster's *mean* staleness
     (paper: "the PS calculates an average staleness value ... applied to all
-    devices within that cluster").
+    devices within that cluster"). ``mask`` ([n] bool, optional) restricts
+    both the quantile edges and the bucket means to the selected devices.
+
+    Never-participated devices (δ = t) are clamped to θ_d = 0 *after*
+    clustering: averaging them into a bucket with lower mean staleness would
+    hand a first-time participant a compressed initial model, violating the
+    paper's full-precision-on-first-download rule.
     """
     d = delta.astype(jnp.float32)
-    edges = jnp.quantile(d, jnp.linspace(0.0, 1.0, n_clusters + 1)[1:-1])
+    n = d.shape[0]
+    m = jnp.ones_like(d) if mask is None else mask.astype(jnp.float32)
+    n_sel = jnp.maximum(jnp.sum(m), 1.0)
+    # quantile edges over the selected set only: sort with the unselected
+    # pushed to +inf, then index at the selected-count quantile positions
+    d_sorted = jnp.sort(jnp.where(m > 0, d, jnp.inf))
+    qs = jnp.linspace(0.0, 1.0, n_clusters + 1)[1:-1]
+    pos = jnp.clip((qs * (n_sel - 1.0)).astype(jnp.int32), 0, n - 1)
+    edges = d_sorted[pos]
     cid = jnp.searchsorted(edges, d).astype(jnp.int32)  # [n] in [0, K)
-    sums = jnp.zeros(n_clusters).at[cid].add(d)
-    cnts = jnp.zeros(n_clusters).at[cid].add(1.0)
+    sums = jnp.zeros(n_clusters).at[cid].add(d * m)
+    cnts = jnp.zeros(n_clusters).at[cid].add(m)
     mean_d = sums / jnp.maximum(cnts, 1.0)
     per_cluster = download_ratio(mean_d, t, theta_d_max)   # [K]
-    return cid, per_cluster[cid]
+    ratios = per_cluster[cid]
+    # full-precision first download: δ=t ⇒ θ_d=0 regardless of bucket mean
+    ratios = jnp.where(delta >= t, 0.0, ratios)
+    return cid, ratios

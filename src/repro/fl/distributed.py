@@ -80,25 +80,12 @@ def _n_pods(mesh) -> int:
                                  and "pod" in mesh.axis_names) else 1
 
 
-def _shard_map(f, mesh, in_specs, out_specs, axis_names):
-    """Partial-manual shard_map across old/new jax APIs.
-
-    New jax exposes ``jax.shard_map(..., axis_names=…, check_vma=…)``; older
-    releases spell the same thing ``jax.experimental.shard_map.shard_map``
-    with the *complement* ``auto=`` set and ``check_rep=``. Note the old-API
-    branch only keeps THIS module importable/buildable on old jax — full
-    mesh execution also needs the new ambient-mesh shard_map inside the
-    model stack (models/model.py, models/moe.py), which is why the mesh
-    tests skip on old jax.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=axis_names,
-                             check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    auto = frozenset(mesh.axis_names) - set(axis_names)
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False, auto=auto)
+# Old/new-API shard_map shim now lives in launch/mesh.py (shared with the
+# sharded Track-A round engine). Note the old-API branch only keeps THIS
+# module importable/buildable on old jax — full mesh execution also needs
+# the new ambient-mesh shard_map inside the model stack (models/model.py,
+# models/moe.py), which is why the mesh tests skip on old jax.
+from repro.launch.mesh import shard_map_compat as _shard_map  # noqa: E402
 
 
 def init_state(params, dcfg: DistConfig, mesh=None) -> TrainState:
@@ -170,16 +157,28 @@ def tree_download_recover(params, prev, ratio, backend: str = "jnp"):
         params, prev)
 
 
-def tree_upload_compress(delta, ef, ratio, backend: str = "jnp"):
-    """Returns (sparse_delta, new_ef)."""
+def tree_upload_compress(delta, ef, ratio, backend: str = "jnp",
+                         wire_dtype=None):
+    """Returns (sparse_delta_in_wire_format, new_ef).
+
+    ``wire_dtype`` (e.g. bf16 for ``compressed_collective``) is applied
+    BEFORE the error-feedback residual is computed: EF must see exactly what
+    the wire carries — sparsification loss *and* quantization loss — or it
+    silently corrects only the former and the bf16 rounding error compounds
+    round over round.
+    """
+    def to_wire(s):
+        return s.astype(wire_dtype) if wire_dtype is not None else s
+
     if ef is None:
-        return jax.tree.map(lambda d: _leaf_topk(d, ratio, backend),
-                            delta), None
+        sparse = jax.tree.map(lambda d: _leaf_topk(d, ratio, backend), delta)
+        return jax.tree.map(to_wire, sparse), None
     corrected = jax.tree.map(lambda d, e: d + e.astype(d.dtype), delta, ef)
     sparse = jax.tree.map(lambda d: _leaf_topk(d, ratio, backend), corrected)
-    new_ef = jax.tree.map(lambda c, s: (c - s).astype(c.dtype), corrected,
-                          sparse)
-    return sparse, new_ef
+    wire = jax.tree.map(to_wire, sparse)
+    new_ef = jax.tree.map(lambda c, w: (c - w.astype(c.dtype)).astype(c.dtype),
+                          corrected, wire)
+    return wire, new_ef
 
 
 # ---------------------------------------------------------------------------
@@ -215,11 +214,13 @@ def _cohort_round(params, prev, ef, batch, theta_d, theta_u,
 
     w_fin, losses = jax.lax.scan(sgd_step, w_init, jnp.arange(tau))
 
-    # (3) local delta in model dtype; (4) upload sparsification (+EF)
+    # (3) local delta in model dtype; (4) upload sparsification (+EF);
+    # the bf16 wire cast happens INSIDE the compressor so the EF residual
+    # is computed against the wire-format delta, not the pre-cast one
+    sparse_wire = jnp.bfloat16 if dcfg.compressed_collective else None
     delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype), w_init, w_fin)
-    sparse, new_ef = tree_upload_compress(delta, ef, theta_u, backend)
-    if dcfg.compressed_collective:
-        sparse = jax.tree.map(lambda d: d.astype(jnp.bfloat16), sparse)
+    sparse, new_ef = tree_upload_compress(delta, ef, theta_u, backend,
+                                          wire_dtype=sparse_wire)
     new_prev = quantize_tree(w_fin) if dcfg.prev_int8 else w_fin
     return sparse, new_prev, new_ef, jnp.mean(losses)
 

@@ -4,35 +4,49 @@ Every participant's round is simulated exactly: staleness-dependent download
 compression + Fig.-3 recovery, τ local mini-batch-SGD iterations at the
 Eq.-9 batch size, importance-ranked upload top-k, synchronous aggregation.
 Wall-clock and traffic are accounted through the calibrated capability model
-(Eq. 7). Participants are vectorized with vmap (padded batches + masks keep
-a single jit specialization alive across heterogeneous batch sizes).
+(Eq. 7).
 
-The round runs on the **flat-parameter engine** (DESIGN.md §1): the global
-model is ONE [n_params] f32 vector and all client-local models live in a
-single [n_clients, n_params] buffer for the whole simulation. The model
-pytree exists only at init (flatten once) and inside the model's apply_fn
-(static-slice unflatten, fused by XLA). Download-compress → recover → τ-step
-scan → upload-top-k → aggregation → local-buffer scatter is ONE jitted step
-with donated buffers, so XLA never round-trips the [P, n_params]
-intermediates; thresholds come from the O(n) histogram operators
-(``core.compression.fused_*``) behind a backend switch resolved once per
-simulation (DESIGN.md §3–4).
+The simulator is a **layered round engine** (DESIGN.md §1, §7):
+
+* **Planning layer** (`RoundPlanner`) — participant-scoped: the Eq. 8–9
+  batch-size leader is chosen from the round's participant set N^t and the
+  §4.1 staleness clusters are built over N^t (``CaesarConfig.plan_scope``
+  keeps the all-device variant for A/B measurement). Baseline policies
+  (fl/baselines.py) plug in at the same seam.
+* **Execution layer** (`RoundExecutor`) — the flat-parameter engine: the
+  global model is ONE [n_params] f32 vector, all client-local models live in
+  a single [n_clients, n_params] buffer, and download-compress → recover →
+  τ-step scan → upload-top-k → aggregate → scatter is ONE jitted step with
+  donated buffers. Participants are processed in fixed-size **chunks** via a
+  lax.scan that carries (local buffer, upload accumulator), so the
+  [P, n_params] intermediates are bounded by ``chunk_size × n_params``
+  regardless of cohort size. The optional **sharded** mode places the local
+  buffer's rows and the participant chunks across local devices with a
+  shard_map over the "data" axis (launch/mesh.py); upload sums cross shards
+  via psum.
+
+Thresholds come from the O(n) histogram operators (``core.compression.
+fused_*``) behind a backend switch resolved once per simulation (§3–4).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import caesar as CA
 from repro.core import compression as C
 from repro.data import partition, synthetic
 from repro.fl import baselines as BL
 from repro.fl.capability import CapabilityModel
+from repro.launch import mesh as MESH
 from repro.models import paper_models as PM
 from repro.optim import sgd as SGD
 
@@ -55,6 +69,15 @@ class SimConfig:
     target_accuracy: Optional[float] = None
     # compression-operator backend: auto | pallas | interpret | jnp
     backend: str = "auto"
+    # execution layer (DESIGN.md §7): participants per chunk. None ⇒ one
+    # chunk of all participants (the PR-1 single-vmap engine); an int bounds
+    # the per-round [P, n_params] working set at chunk_size × n_params.
+    chunk_size: Optional[int] = None
+    # shard the [n_clients, n_params] local buffer + participant chunks over
+    # the local devices ("data" axis, DESIGN.md §7). Requires n_clients
+    # divisible by the device count; participants are drawn stratified per
+    # shard so every device owns its participants' buffer rows.
+    sharded: bool = False
     # preliminary-study variants (Fig. 1): compress only one direction
     fic_down_only: bool = False
     fic_up_only: bool = False
@@ -64,12 +87,18 @@ class SimConfig:
 
 @dataclasses.dataclass
 class History:
+    """Eval-aligned series: every list below has one entry per eval round
+    (``rounds[i]`` is the round number of entry i). ``waiting``/``wall`` are
+    RUNNING MEANS over all rounds simulated so far — per-round raw samples
+    live in the ``*_per_round`` lists (one entry per round)."""
     rounds: list = dataclasses.field(default_factory=list)
     sim_time: list = dataclasses.field(default_factory=list)      # cumulative s
     traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
     accuracy: list = dataclasses.field(default_factory=list)
-    waiting: list = dataclasses.field(default_factory=list)       # per-round avg
-    wall: list = dataclasses.field(default_factory=list)          # host s/round
+    waiting: list = dataclasses.field(default_factory=list)       # running mean s
+    wall: list = dataclasses.field(default_factory=list)          # running mean s
+    waiting_per_round: list = dataclasses.field(default_factory=list)
+    wall_per_round: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
@@ -86,61 +115,125 @@ class History:
         return None
 
 
-class Simulator:
-    def __init__(self, cfg: SimConfig):
+# ---------------------------------------------------------------------------
+# Planning layer
+# ---------------------------------------------------------------------------
+
+class RoundPlanner:
+    """Maps (round, participant set N^t, capability snapshot) to
+    per-participant (θ_d, θ_u, batch, τ) arrays.
+
+    Caesar plans are **participant-scoped** (Algorithm 1 lines 8–10 run over
+    N^t): the Eq. 8–9 leader is the fastest participant and the §4.1
+    staleness clusters are built over participants. ``plan_scope="all"``
+    plans over every device instead (the leader may then be a device that is
+    not even in the round) — kept only to A/B-measure the scoping itself;
+    the other planner fixes (δ=t clamp, histogram-edge quantiles) apply in
+    both scopes. Baseline policies receive a ctx that is already
+    participant-scoped.
+    """
+
+    def __init__(self, cfg: SimConfig, volumes, label_dist, model_bits,
+                 policy):
+        scope = cfg.caesar.plan_scope
+        if scope not in ("participants", "all"):
+            raise ValueError(f"unknown plan_scope {scope!r}; "
+                             "want 'participants' or 'all'")
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
-        self.backend = C.resolve_backend(cfg.backend)
-        ds_fn = synthetic.DATASETS[cfg.dataset]
-        self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
-                          **(cfg.dataset_kwargs or {}))
-        model_name = cfg.model or PM.DATASET_MODEL[cfg.dataset]
-        init_fn, self.apply_fn = PM.MODELS[model_name]
-        feat_kw = {}
-        if model_name == "lr":
-            feat_kw = {"n_features": self.data.x_train.shape[-1]}
-        self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
-                               n_classes=self.data.n_classes, **feat_kw)
-        # flatten ONCE: the engine state is flat from here on
-        self.flat0, self.spec = C.flatten_tree(self.params0)
-        self.n_params = self.spec.n_params
-        self.model_bits = self.n_params * C.FULL_BITS
-
-        self.splits, label_dist, volumes = partition.dirichlet_partition(
-            self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
-        self.volumes = volumes
-        self.label_dist = label_dist
-        self.cap = CapabilityModel(cfg.n_clients, cfg.seed)
-
+        self.model_bits = model_bits
+        self.is_caesar = cfg.scheme == "caesar"
+        self.policy = policy
         self.caesar_state = CA.init_state(jnp.asarray(volumes, jnp.float32),
                                           jnp.asarray(label_dist), cfg.caesar)
-        self.policy = None if cfg.scheme == "caesar" else \
-            self._make_policy(cfg.scheme)
         self.grad_norms = np.zeros(cfg.n_clients)   # for PyramidFL ranking
-        self._build_jits()
 
-    def _make_policy(self, name):
-        if name == "fic":
-            return BL.FIC(compress_down=not self.cfg.fic_up_only,
-                          compress_up=not self.cfg.fic_down_only)
-        if name == "cac":
-            return BL.CAC(compress_down=not self.cfg.fic_up_only,
-                          compress_up=not self.cfg.fic_down_only)
-        return BL.POLICIES[name]()
+    def _participant_mask(self, parts: np.ndarray) -> np.ndarray:
+        mask = np.zeros(self.cfg.n_clients, bool)
+        mask[parts] = True
+        return mask
 
-    # ------------------------------------------------------------------
-    # the fused round step (jitted once, donated buffers)
-    # ------------------------------------------------------------------
-    def _build_jits(self):
+    def plan(self, t: int, parts: np.ndarray, mu, bw_d, bw_u):
+        """Per-participant (theta_d, theta_u, batch, taus) np arrays [P]."""
+        cfg = self.cfg
+        if self.is_caesar:
+            ccfg = cfg.caesar
+            mask = (jnp.asarray(self._participant_mask(parts))
+                    if ccfg.plan_scope == "participants" else None)
+            plan = CA.plan_round_jit(self.caesar_state, jnp.int32(t), ccfg,
+                                     jnp.asarray(bw_d, jnp.float32),
+                                     jnp.asarray(bw_u, jnp.float32),
+                                     jnp.asarray(mu, jnp.float32),
+                                     float(self.model_bits), mask)
+            return (np.asarray(plan.theta_d)[parts],
+                    np.asarray(plan.theta_u)[parts],
+                    np.asarray(plan.batch)[parts],
+                    np.full(len(parts), ccfg.tau, np.int32))
+        ctx = {"n": len(parts), "t": t, "total_rounds": cfg.rounds,
+               "mu": mu[parts], "bw_d": bw_d[parts], "bw_u": bw_u[parts],
+               "b_max": cfg.caesar.b_max, "tau": cfg.caesar.tau,
+               "grad_norms": self.grad_norms[parts]}
+        p = self.policy.plan(ctx)
+        return p.theta_d, p.theta_u, p.batch, p.local_iters
+
+    def observe(self, t: int, parts: np.ndarray, gnorms: np.ndarray):
+        """Post-aggregation bookkeeping (participation records, grad norms)."""
+        self.grad_norms[parts] = gnorms
+        if self.is_caesar:
+            self.caesar_state = CA.post_round_jit(
+                self.caesar_state, jnp.asarray(self._participant_mask(parts)),
+                jnp.int32(t))
+
+
+# ---------------------------------------------------------------------------
+# Execution layer
+# ---------------------------------------------------------------------------
+
+class RoundExecutor:
+    """The fused flat-parameter round step, chunked and optionally sharded.
+
+    One jitted step per simulation (donated [n_params] global vector +
+    [n_clients, n_params] local buffer). Internally a lax.scan over
+    fixed-size participant chunks carries (local buffer, upload-sum): each
+    chunk gathers its rows, runs the vmapped per-participant round, masks
+    its upload contribution into the accumulator and scatters its rows back
+    — so only [chunk, n_params] intermediates are ever live. In sharded
+    mode the same scan runs inside a shard_map over the 1-D "data" mesh:
+    every device owns ``n_clients / n_dev`` buffer rows and its own
+    participants (grouped + padded host-side), and the upload sums cross
+    shards with a psum.
+    """
+
+    def __init__(self, cfg: SimConfig, apply_fn, spec: C.FlatSpec,
+                 backend: str, quantize: bool, n_part: int, mesh=None):
+        self.cfg = cfg
+        self.apply_fn = apply_fn
+        self.spec = spec
+        self.backend = backend
+        self.quantize = quantize
+        self.mesh = mesh
+        self.n_clients = cfg.n_clients
+        self.n_dev = mesh.shape["data"] if mesh is not None else 1
+        if n_part % self.n_dev:
+            raise ValueError(f"participants ({n_part}) must divide evenly "
+                             f"over {self.n_dev} shards")
+        self.rows_per_shard = self.n_clients // self.n_dev
+        self.p_shard = n_part // self.n_dev
+        self.chunk, self.p_pad, self.n_chunks = C.chunk_layout(
+            self.p_shard, cfg.chunk_size)
+        self._build()
+
+    # -- jit construction ---------------------------------------------------
+    def _build(self):
         cfg = self.cfg
         apply_fn = self.apply_fn
         spec = self.spec
         backend = self.backend
-        n_params = self.n_params
+        n_params = spec.n_params
+        chunk, n_chunks = self.chunk, self.n_chunks
         # scheme-level switches are fixed for the simulation → Python-level
         # branches, not lax.cond: the compiled step contains only one path.
         use_recovery = cfg.scheme == "caesar"
-        quantize = bool(getattr(self.policy, "quantize", False))
+        quantize = self.quantize
 
         def ce_loss(params, x, y, w):
             logits = apply_fn(params, x)
@@ -195,34 +288,229 @@ class Simulator:
                 up, up_bits = C.topk_sparsify_at(delta, thr_u)
             return up, flat_fin, down_bits, up_bits, gnorm
 
-        def round_step(global_f, local_buf, parts, xs, ys, ws, ims, lr,
-                       theta_d, theta_u):
-            """The whole round: compress→recover→train→upload→aggregate→
-            scatter, one jit, donated [n_params] + [n, n_params] buffers."""
-            g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
-            lp_sel = local_buf[parts]                       # [P, n_params]
-            ups, new_lp, down_bits, up_bits, gnorms = jax.vmap(
-                participant_round,
-                in_axes=(None, None, None, 0, 0, 0, 0, 0, None, 0, 0))(
-                global_f, g_cdf, g_max, lp_sel, xs, ys, ws, ims, lr,
-                theta_d, theta_u)
-            # aggregate (Algorithm 1 line 13) + in-place buffer updates
-            new_global = global_f - jnp.mean(ups, axis=0)
-            new_buf = local_buf.at[parts].set(new_lp)
-            return new_global, new_buf, down_bits, up_bits, gnorms
+        def chunked_scan(global_f, g_cdf, g_max, buf, parts_l, pmask, xs, ys,
+                         ws, ims, lr, theta_d, theta_u):
+            """Scan over participant chunks; carry = (buffer, upload-sum).
 
-        # donating the global vector and the [n, n_params] local buffer lets
-        # XLA scatter the participants' rows in place instead of copying the
-        # whole buffer every round (~60ms/round at 100×164k on CPU)
-        self._round_step = jax.jit(round_step, donate_argnums=(0, 1))
+            ``parts_l`` are buffer-LOCAL row indices [p_pad]; padded entries
+            carry an out-of-range index (scatter drops them, the clamped
+            gather row is masked out of the upload sum and written back
+            unchanged)."""
+            def reshape_c(a):
+                return a.reshape((n_chunks, chunk) + a.shape[1:])
+            inp = tuple(map(reshape_c, (parts_l, pmask, xs, ys, ws, ims,
+                                        theta_d, theta_u)))
+
+            def chunk_step(carry, c):
+                buf, up_sum = carry
+                p_c, m_c, xs_c, ys_c, ws_c, ims_c, td_c, tu_c = c
+                lp_sel = buf[p_c]                       # [chunk, n_params]
+                ups, new_lp, db, ub, gn = jax.vmap(
+                    participant_round,
+                    in_axes=(None, None, None, 0, 0, 0, 0, 0, None, 0, 0))(
+                    global_f, g_cdf, g_max, lp_sel, xs_c, ys_c, ws_c, ims_c,
+                    lr, td_c, tu_c)
+                up_sum = up_sum + jnp.sum(ups * m_c[:, None], axis=0)
+                buf = buf.at[p_c].set(
+                    jnp.where(m_c[:, None] > 0, new_lp, lp_sel))
+                return (buf, up_sum), (db, ub, gn)
+
+            (buf, up_sum), (db, ub, gn) = jax.lax.scan(
+                chunk_step, (buf, jnp.zeros(n_params, jnp.float32)), inp)
+            return buf, up_sum, db.reshape(-1), ub.reshape(-1), gn.reshape(-1)
+
+        if self.mesh is None:
+            def round_step(global_f, local_buf, parts, pmask, xs, ys, ws,
+                           ims, lr, theta_d, theta_u):
+                g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
+                buf, up_sum, db, ub, gn = chunked_scan(
+                    global_f, g_cdf, g_max, local_buf, parts, pmask, xs, ys,
+                    ws, ims, lr, theta_d, theta_u)
+                # aggregate (Algorithm 1 line 13) over the valid participants
+                new_global = global_f - up_sum / jnp.maximum(jnp.sum(pmask),
+                                                             1.0)
+                return new_global, buf, db, ub, gn
+
+            # donating the global vector and the [n, n_params] local buffer
+            # lets XLA scatter the participants' rows in place instead of
+            # copying the whole buffer every round (~60ms/round at 100×164k
+            # on CPU)
+            self._round_step = jax.jit(round_step, donate_argnums=(0, 1))
+            return
+
+        rows_per_shard = self.rows_per_shard
+
+        def shard_body(global_f, g_cdf, g_max, buf, parts, pmask, xs, ys, ws,
+                       ims, lr, theta_d, theta_u):
+            # global → shard-local buffer rows; padding (= n_clients) stays
+            # out of range for every shard
+            row0 = jax.lax.axis_index("data") * rows_per_shard
+            parts_l = parts - row0
+            buf, up_sum, db, ub, gn = chunked_scan(
+                global_f, g_cdf, g_max, buf, parts_l, pmask, xs, ys, ws, ims,
+                lr, theta_d, theta_u)
+            up_sum = jax.lax.psum(up_sum, "data")
+            cnt = jax.lax.psum(jnp.sum(pmask), "data")
+            new_global = global_f - up_sum / jnp.maximum(cnt, 1.0)
+            return new_global, buf, db, ub, gn
+
+        sharded = MESH.shard_map_compat(
+            shard_body, self.mesh,
+            in_specs=(P(), P(), P(), P("data", None), P("data"), P("data"),
+                      P("data"), P("data"), P("data"), P("data"), P(),
+                      P("data"), P("data")),
+            out_specs=(P(), P("data", None), P("data"), P("data"),
+                       P("data")),
+            axis_names={"data"})
+
+        def round_step_sharded(global_f, local_buf, parts, pmask, xs, ys, ws,
+                               ims, lr, theta_d, theta_u):
+            # one global-model histogram per round, replicated into shards
+            g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
+            return sharded(global_f, g_cdf, g_max, local_buf, parts, pmask,
+                           xs, ys, ws, ims, lr, theta_d, theta_u)
+
+        self._round_step = jax.jit(round_step_sharded, donate_argnums=(0, 1))
+
+    # -- host-side chunk/shard marshalling ----------------------------------
+    def _group(self, a: np.ndarray, order: np.ndarray, fill) -> np.ndarray:
+        """Order by shard, pad each shard's group to p_pad, flatten."""
+        d, ps, pp = self.n_dev, self.p_shard, self.p_pad
+        a = np.asarray(a)[order].reshape((d, ps) + np.asarray(a).shape[1:])
+        if pp > ps:
+            a = np.concatenate(
+                [a, np.full((d, pp - ps) + a.shape[2:], fill, a.dtype)],
+                axis=1)
+        return a.reshape((d * pp,) + a.shape[2:])
+
+    def _ungroup(self, a, order: np.ndarray) -> np.ndarray:
+        """Drop padding, restore the caller's participant order."""
+        d, ps, pp = self.n_dev, self.p_shard, self.p_pad
+        a = np.asarray(a).reshape((d, pp) + np.asarray(a).shape[1:])
+        a = a[:, :ps].reshape((d * ps,) + a.shape[2:])
+        out = np.empty_like(a)
+        out[order] = a
+        return out
+
+    def step(self, global_f, local_buf, parts: np.ndarray, xs, ys, ws, ims,
+             lr, theta_d, theta_u):
+        """Run one round. Returns (global_f, local_buf, down_bits [P],
+        up_bits [P], gnorms [P]) with per-participant outputs as np arrays
+        in the caller's ``parts`` order."""
+        owner = parts // self.rows_per_shard
+        if self.n_dev > 1:
+            counts = np.bincount(owner, minlength=self.n_dev)
+            if not (counts == self.p_shard).all():
+                raise ValueError(
+                    "sharded mode needs stratified participants "
+                    f"({self.p_shard} per shard; got {counts.tolist()})")
+        order = np.argsort(owner, kind="stable")
+        g = lambda a, fill: jnp.asarray(self._group(a, order, fill))
+        new_global, new_buf, db, ub, gn = self._round_step(
+            global_f, local_buf,
+            g(parts.astype(np.int32), np.int32(self.n_clients)),
+            g(np.ones(len(parts), np.float32), np.float32(0.0)),
+            g(xs, xs.dtype.type(0)), g(ys, ys.dtype.type(0)),
+            g(ws, np.float32(0.0)), g(ims, np.float32(0.0)), lr,
+            g(theta_d, np.float32(0.0)), g(theta_u, np.float32(0.0)))
+        return (new_global, new_buf, self._ungroup(db, order),
+                self._ungroup(ub, order), self._ungroup(gn, order))
+
+
+# ---------------------------------------------------------------------------
+# The simulator: orchestration + accounting
+# ---------------------------------------------------------------------------
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.backend = C.resolve_backend(cfg.backend)
+        ds_fn = synthetic.DATASETS[cfg.dataset]
+        self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
+                          **(cfg.dataset_kwargs or {}))
+        model_name = cfg.model or PM.DATASET_MODEL[cfg.dataset]
+        init_fn, self.apply_fn = PM.MODELS[model_name]
+        feat_kw = {}
+        if model_name == "lr":
+            feat_kw = {"n_features": self.data.x_train.shape[-1]}
+        self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
+                               n_classes=self.data.n_classes, **feat_kw)
+        # flatten ONCE: the engine state is flat from here on
+        self.flat0, self.spec = C.flatten_tree(self.params0)
+        self.n_params = self.spec.n_params
+        self.model_bits = self.n_params * C.FULL_BITS
+
+        self.splits, label_dist, volumes = partition.dirichlet_partition(
+            self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
+        self.volumes = volumes
+        self.label_dist = label_dist
+        self.cap = CapabilityModel(cfg.n_clients, cfg.seed)
+
+        self.mesh = MESH.make_data_mesh() if cfg.sharded else None
+        self.n_dev = self.mesh.shape["data"] if self.mesh is not None else 1
+        if cfg.n_clients % self.n_dev:
+            raise ValueError(f"n_clients ({cfg.n_clients}) must divide over "
+                             f"{self.n_dev} shards")
+        n_part = max(1, int(round(cfg.participation * cfg.n_clients)))
+        # sharded rounds need equal per-shard cohorts (static shapes)
+        self.n_part = max(self.n_dev, (n_part // self.n_dev) * self.n_dev)
+        if self.n_part != n_part:
+            warnings.warn(
+                f"sharded mode adjusted the cohort from {n_part} to "
+                f"{self.n_part} participants/round ({self.n_dev} shards "
+                "need equal per-shard cohorts); pick a participation whose "
+                "cohort divides the device count to silence this",
+                stacklevel=2)
+
+        self.policy = None if cfg.scheme == "caesar" else \
+            self._make_policy(cfg.scheme)
+        self.planner = RoundPlanner(cfg, volumes, label_dist,
+                                    self.model_bits, self.policy)
+        self.executor = RoundExecutor(
+            cfg, self.apply_fn, self.spec, self.backend,
+            quantize=bool(getattr(self.policy, "quantize", False)),
+            n_part=self.n_part, mesh=self.mesh)
 
         def evaluate(flat_params, x, y):
-            logits = apply_fn(C.unflatten_vector(flat_params, spec), x)
+            logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
+                                   x)
             return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
         self._eval = jax.jit(evaluate)
 
+    # planner-owned state, exposed for tests/benchmarks
+    @property
+    def caesar_state(self):
+        return self.planner.caesar_state
+
+    @property
+    def grad_norms(self):
+        return self.planner.grad_norms
+
+    def _make_policy(self, name):
+        if name == "fic":
+            return BL.FIC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        if name == "cac":
+            return BL.CAC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        return BL.POLICIES[name]()
+
     # ------------------------------------------------------------------
+    def _select_participants(self) -> np.ndarray:
+        """Uniform draw; stratified per shard in sharded mode (each device
+        must own its participants' buffer rows). With one device the two
+        are the same draw."""
+        n, d = self.cfg.n_clients, self.n_dev
+        if d <= 1:
+            return self.rng.choice(n, self.n_part, replace=False)
+        rows, ps = n // d, self.n_part // d
+        return np.concatenate([
+            self.rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
+                            replace=False)
+            for s in range(d)])
+
     def _sample_batches(self, clients, batch_sizes, taus, b_cap, tau_cap):
         """numpy gather → [P, τ_cap, b_cap, ...] padded arrays + masks."""
         xs, ys, ws, ims = [], [], [], []
@@ -236,62 +524,44 @@ class Simulator:
             w[:, :int(b)] = 1.0
             im = (np.arange(tau_cap) < tau).astype(np.float32)
             xs.append(x); ys.append(y); ws.append(w); ims.append(im)
-        return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
-                jnp.asarray(np.stack(ws)), jnp.asarray(np.stack(ims)))
+        return (np.stack(xs), np.stack(ys),
+                np.stack(ws).astype(np.float32),
+                np.stack(ims).astype(np.float32))
 
     # ------------------------------------------------------------------
     def run(self, log: Callable[[str], None] = lambda s: None) -> History:
         cfg = self.cfg
         ccfg = cfg.caesar
         n, b_max, tau = cfg.n_clients, ccfg.b_max, ccfg.tau
-        n_part = max(1, int(round(cfg.participation * n)))
         hist = History()
         # fresh copies: the step donates its inputs, flat0 must stay intact
         global_f = jnp.array(self.flat0, copy=True)
         # every client starts from w0 (never-participated ⇒ full-precision DL)
         local_buf = jnp.tile(self.flat0[None, :], (n, 1))
-        cum_time, cum_bits = 0.0, 0.0
-        is_caesar = cfg.scheme == "caesar"
+        if self.mesh is not None:
+            global_f = jax.device_put(global_f,
+                                      NamedSharding(self.mesh, P()))
+            local_buf = jax.device_put(local_buf,
+                                       NamedSharding(self.mesh,
+                                                     P("data", None)))
+        cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
 
         for t in range(1, cfg.rounds + 1):
             wall0 = time.perf_counter()
-            parts = self.rng.choice(n, n_part, replace=False)
+            parts = self._select_participants()
             mu, bw_d, bw_u = self.cap.snapshot(t)
             lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
 
-            if is_caesar:
-                plan = CA.plan_round_jit(self.caesar_state, jnp.int32(t), ccfg,
-                                         jnp.asarray(bw_d, jnp.float32),
-                                         jnp.asarray(bw_u, jnp.float32),
-                                         jnp.asarray(mu, jnp.float32),
-                                         float(self.model_bits))
-                theta_d = np.asarray(plan.theta_d)[parts]
-                theta_u = np.asarray(plan.theta_u)[parts]
-                batch = np.asarray(plan.batch)[parts]
-                taus = np.full(n_part, tau)
-            else:
-                ctx = {"n": n_part, "t": t, "total_rounds": cfg.rounds,
-                       "mu": mu[parts], "bw_d": bw_d[parts],
-                       "bw_u": bw_u[parts], "b_max": b_max, "tau": tau,
-                       "grad_norms": self.grad_norms[parts]}
-                p = self.policy.plan(ctx)
-                theta_d, theta_u = p.theta_d, p.theta_u
-                batch, taus = p.batch, p.local_iters
-
+            theta_d, theta_u, batch, taus = self.planner.plan(
+                t, parts, mu, bw_d, bw_u)
             xs, ys, ws, ims = self._sample_batches(parts, batch, taus,
                                                    b_max, tau)
             global_f, local_buf, down_bits, up_bits, gnorms = \
-                self._round_step(global_f, local_buf,
-                                 jnp.asarray(parts, jnp.int32),
-                                 xs, ys, ws, ims, lr,
-                                 jnp.asarray(theta_d, jnp.float32),
-                                 jnp.asarray(theta_u, jnp.float32))
-            self.grad_norms[parts] = np.asarray(gnorms)
-
-            if is_caesar:
-                mask = np.zeros(n, bool); mask[parts] = True
-                self.caesar_state = CA.post_round_jit(
-                    self.caesar_state, jnp.asarray(mask), jnp.int32(t))
+                self.executor.step(global_f, local_buf, parts, xs, ys, ws,
+                                   ims, lr,
+                                   np.asarray(theta_d, np.float32),
+                                   np.asarray(theta_u, np.float32))
+            self.planner.observe(t, parts, gnorms)
 
             # --- accounting (Eq. 7) ---
             down_b = np.asarray(down_bits, np.float64)
@@ -301,9 +571,11 @@ class Simulator:
             cum_time += float(times.max())
             cum_bits += float(down_b.sum() + up_b.sum())
             waiting = float(np.mean(times.max() - times))
+            waiting_sum += waiting
+            hist.waiting_per_round.append(waiting)
             # the np.asarray conversions above synced on the step outputs, so
             # this is an honest per-round host wall-clock
-            hist.wall.append(time.perf_counter() - wall0)
+            hist.wall_per_round.append(time.perf_counter() - wall0)
 
             if t % cfg.eval_every == 0 or t == cfg.rounds:
                 ne = min(cfg.eval_samples, len(self.data.y_test))
@@ -314,10 +586,11 @@ class Simulator:
                 hist.sim_time.append(cum_time)
                 hist.traffic_bits.append(cum_bits)
                 hist.accuracy.append(acc)
-                hist.waiting.append(waiting)
+                hist.waiting.append(waiting_sum / t)
+                hist.wall.append(float(np.mean(hist.wall_per_round)))
                 log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} acc={acc:.4f} "
                     f"time={cum_time:,.0f}s traffic={cum_bits/8e9:.3f}GB "
-                    f"wait={waiting:.1f}s")
+                    f"wait={waiting_sum / t:.1f}s")
                 if (cfg.target_accuracy is not None
                         and acc >= cfg.target_accuracy):
                     break

@@ -23,3 +23,33 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """1×1 mesh on the single local device (smoke tests / examples)."""
     return _mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_devices: int | None = None):
+    """1-D ("data",) mesh over the local devices.
+
+    The sharded Track-A round engine (fl/simulation.py, DESIGN.md §7) places
+    the [n_clients, n_params] local buffer and the participant chunks across
+    this axis.
+    """
+    n = n_devices or len(jax.devices())
+    return _mesh((n,), ("data",))
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names):
+    """Partial-manual shard_map across old/new jax APIs.
+
+    New jax exposes ``jax.shard_map(..., axis_names=…, check_vma=…)``; older
+    releases spell the same thing ``jax.experimental.shard_map.shard_map``
+    with the *complement* ``auto=`` set and ``check_rep=``. Shared by the
+    Track-B pod reduction (fl/distributed.py) and the sharded Track-A round
+    engine (fl/simulation.py).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)

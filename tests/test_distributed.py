@@ -156,6 +156,37 @@ def test_multipod_execution_subprocess():
     assert "MULTIPOD_OK" in r.stdout, r.stdout + r.stderr
 
 
+def test_error_feedback_sees_wire_format_quantization():
+    """With compressed_collective, EF must accumulate the bf16 quantization
+    error: at θ_u=0 nothing is sparsified away, so any EF mass can only be
+    the wire-cast residual (the pre-fix code computed the residual before
+    the cast and left EF exactly zero here)."""
+    cfg, params, batch = _smoke_setup(tau=1)
+    dcfg = D.DistConfig(theta_d=0.0, theta_u=0.0, local_lr=1e-2,
+                        use_error_feedback=True, compressed_collective=True)
+    state = D.init_state(params, dcfg, mesh=None)
+    step = jax.jit(D.make_train_step(cfg, dcfg, mesh=None))
+    s2, _ = step(state, batch)
+    ef_norm = sum(float(jnp.sum(jnp.abs(e.astype(jnp.float32))))
+                  for e in jax.tree.leaves(s2.ef))
+    assert ef_norm > 0
+
+
+def test_upload_compress_wire_dtype_residual():
+    """tree_upload_compress returns the wire-format delta and an EF residual
+    computed against it: wire + ef must reconstruct the corrected delta."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,)) * 0.3
+    ef0 = jnp.zeros_like(x)
+    wire, ef = D.tree_upload_compress({"w": x}, {"w": ef0},
+                                      jnp.float32(0.0), "jnp",
+                                      wire_dtype=jnp.bfloat16)
+    assert wire["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(wire["w"].astype(jnp.float32) + ef["w"]),
+        np.asarray(x), rtol=0, atol=1e-6)
+    assert float(jnp.sum(jnp.abs(ef["w"]))) > 0   # bf16 rounding captured
+
+
 def test_prev_int8_state_roundtrip():
     """int8 stale-buffer variant (beyond-paper #2c) trains and converges."""
     cfg, params, batch = _smoke_setup(tau=2)

@@ -85,14 +85,28 @@ class TestSimulator:
         cfg_on = _cfg(rounds=6)
         cfg_off = _cfg(rounds=6, caesar=CaesarConfig(
             tau=5, b_max=16, use_batch_opt=False))
-        w_on = np.mean(Simulator(cfg_on).run().waiting)
-        w_off = np.mean(Simulator(cfg_off).run().waiting)
+        # waiting[-1] is the running mean over every simulated round
+        w_on = Simulator(cfg_on).run().waiting[-1]
+        w_off = Simulator(cfg_off).run().waiting[-1]
         assert w_on <= w_off + 1e-6
 
     def test_history_to_target(self):
         h = Simulator(_cfg()).run()
         hit = h.to_target(0.0)
         assert hit is not None and hit[2] >= 1
+
+    def test_waiting_history_is_round_aligned_running_mean(self):
+        """History.waiting/wall are eval-aligned RUNNING MEANS over every
+        simulated round (not a 1-in-eval_every subsample); the raw per-round
+        samples live in waiting_per_round/wall_per_round."""
+        h = Simulator(_cfg(rounds=8, eval_every=4)).run()
+        assert len(h.waiting) == len(h.rounds) == len(h.wall) == 2
+        assert len(h.waiting_per_round) == len(h.wall_per_round) == 8
+        for i, t in enumerate(h.rounds):
+            np.testing.assert_allclose(
+                h.waiting[i], np.mean(h.waiting_per_round[:t]), rtol=1e-9)
+            np.testing.assert_allclose(
+                h.wall[i], np.mean(h.wall_per_round[:t]), rtol=1e-9)
 
 
 class TestSyntheticData:

@@ -1,0 +1,149 @@
+"""Chunked/sharded round-engine tests (DESIGN.md §7).
+
+The execution layer must be a pure performance/memory knob: same seed ⇒ same
+trajectory (within float-reduction noise) for every (chunk_size, sharded)
+setting. A subprocess test exercises a real 4-device shard_map placement via
+xla_force_host_platform_device_count (jax locks the device count at first
+init, so it needs a fresh interpreter).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core.caesar import CaesarConfig
+from repro.fl.simulation import SimConfig, Simulator
+
+
+def _cfg(**kw):
+    base = dict(dataset="har", rounds=6, n_clients=24, data_scale=0.25,
+                eval_every=2, participation=0.25, seed=3,
+                dataset_kwargs={"sep": 1.8, "noise": 2.0},
+                caesar=CaesarConfig(tau=3, b_max=8))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _traj(**kw):
+    h = Simulator(_cfg(**kw)).run()
+    return h
+
+
+class TestChunkLayout:
+    def test_divisible(self):
+        assert C.chunk_layout(12, 4) == (4, 12, 3)
+
+    def test_padded_tail(self):
+        chunk, padded, n_chunks = C.chunk_layout(10, 4)
+        assert (chunk, padded, n_chunks) == (4, 12, 3)
+
+    def test_none_means_single_chunk(self):
+        assert C.chunk_layout(7, None) == (7, 7, 1)
+        assert C.chunk_layout(7, 0) == (7, 7, 1)
+
+    def test_clamped_to_n_items(self):
+        assert C.chunk_layout(3, 64) == (3, 3, 1)
+
+
+class TestChunkedParity:
+    def test_chunked_matches_unchunked_same_seed(self):
+        """chunk_size must not change the trajectory: same participants,
+        same per-participant math, only the reduction order differs."""
+        h_ref = _traj()
+        h_chunk = _traj(chunk_size=2)           # P=6 → 3 chunks
+        assert h_ref.rounds == h_chunk.rounds
+        np.testing.assert_allclose(h_ref.accuracy, h_chunk.accuracy,
+                                   atol=5e-3)
+        np.testing.assert_allclose(h_ref.traffic_bits, h_chunk.traffic_bits,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(h_ref.waiting, h_chunk.waiting, rtol=1e-4)
+
+    def test_padded_tail_chunk_is_inert(self):
+        """P=6 with chunk_size=4 pads the last chunk with 2 dummy rows —
+        they must not perturb aggregation or the local buffer."""
+        h_ref = _traj()
+        h_pad = _traj(chunk_size=4)
+        np.testing.assert_allclose(h_ref.accuracy, h_pad.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_ref.traffic_bits, h_pad.traffic_bits,
+                                   rtol=1e-6)
+
+    def test_sharded_single_device_matches_unsharded(self):
+        """On one device the stratified draw equals the uniform draw, so
+        sharded mode must reproduce the unsharded trajectory."""
+        h_ref = _traj(chunk_size=2)
+        h_sh = _traj(chunk_size=2, sharded=True)
+        np.testing.assert_allclose(h_ref.accuracy, h_sh.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_ref.traffic_bits, h_sh.traffic_bits,
+                                   rtol=1e-6)
+
+    def test_baseline_scheme_chunked(self):
+        """Non-caesar schemes run through the same chunked executor."""
+        h = _traj(scheme="prowd", rounds=4, chunk_size=4)
+        assert np.isfinite(h.accuracy[-1])
+
+
+class TestExecutorMarshalling:
+    def test_group_ungroup_roundtrip(self):
+        sim = Simulator(_cfg(chunk_size=4))
+        ex = sim.executor
+        parts = sim._select_participants()
+        order = np.argsort(parts // ex.rows_per_shard, kind="stable")
+        vals = np.arange(len(parts), dtype=np.float32) * 1.5
+        grouped = ex._group(vals, order, np.float32(-1.0))
+        assert grouped.shape[0] == ex.n_dev * ex.p_pad
+        back = ex._ungroup(grouped, order)
+        np.testing.assert_array_equal(back, vals)
+
+    def test_oversized_chunk_clamps_to_cohort(self):
+        sim = Simulator(_cfg(chunk_size=64))      # P=6 < chunk_size
+        assert sim.executor.chunk == sim.executor.p_shard
+        assert sim.executor.n_chunks == 1
+
+    def test_unknown_plan_scope_rejected(self):
+        with pytest.raises(ValueError):
+            Simulator(_cfg(caesar=CaesarConfig(plan_scope="nope")))
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json
+    import numpy as np
+    from repro.core.caesar import CaesarConfig
+    from repro.fl.simulation import SimConfig, Simulator
+
+    cfg = SimConfig(dataset="har", rounds=4, n_clients=24, data_scale=0.25,
+                    eval_every=2, participation=1/3, seed=3,
+                    dataset_kwargs={"sep": 1.8, "noise": 2.0},
+                    caesar=CaesarConfig(tau=3, b_max=8),
+                    chunk_size=2, sharded=True)
+    sim = Simulator(cfg)
+    assert sim.n_dev == 4, sim.n_dev
+    assert sim.executor.p_shard == 2
+    h = sim.run()
+    assert all(np.isfinite(a) for a in h.accuracy)
+    # every shard's rows moved: each device owns 6 clients and drew 2
+    # participants per round, so after 4 rounds every shard has updates
+    buf = np.asarray(sim.global_flat)
+    assert np.isfinite(buf).all()
+    print("SHARDED4_OK", h.accuracy[-1])
+""")
+
+
+@pytest.mark.slow
+def test_sharded_multidevice_subprocess():
+    """Real 4-shard placement: local buffer rows + participant chunks are
+    device-placed, upload sums cross shards via psum."""
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin"),
+           "HOME": os.environ.get("HOME", "/root")}
+    if os.environ.get("JAX_PLATFORMS"):
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert "SHARDED4_OK" in r.stdout, r.stdout + r.stderr
