@@ -7,8 +7,13 @@ Measures, on a CPU-budget 100-client/20-round HAR config:
     fused flat-parameter engine (DESIGN.md §1),
   * threshold-selection time (exact quantile vs jnp histogram vs Pallas
     interpret histogram) on an [n_params] vector,
+  * the fused engine with and without the double-buffered sampling pipeline
+    (SimConfig.pipelined) — the overlap speedup plus same-seed parity,
   * end-to-end simulation wall and final accuracy for BOTH engines with the
     same seeds (trajectory-parity evidence).
+
+Per-round medians exclude round 1 (the jit compile, reported separately as
+History.compile_s) via the warmup drop in `_median_steady`.
 
 The default uses τ=1 local steps so the measurement isolates the round
 *engine* (the local-SGD math is line-for-line identical in both engines and
@@ -37,13 +42,15 @@ from repro.kernels import topk_threshold as TT
 ROOT = Path(__file__).resolve().parent.parent
 
 
-def bench_config(tau: int, n_clients: int, rounds: int) -> SimConfig:
+def bench_config(tau: int, n_clients: int, rounds: int,
+                 pipelined: bool = True) -> SimConfig:
     # plan_scope="all" pins the PLANNING layer to what LegacyEngine below
     # computes (plan_round without a participant mask), so the seed-vs-fused
     # comparison isolates the execution engine — not the PR-2 planner fix
     return SimConfig(dataset="har", scheme="caesar", n_clients=n_clients,
                      participation=0.1, rounds=rounds, data_scale=0.25,
                      eval_every=10 ** 6,   # final-round eval only
+                     pipelined=pipelined,
                      caesar=CaesarConfig(tau=tau, b_max=16,
                                          plan_scope="all"))
 
@@ -60,7 +67,6 @@ class LegacyEngine:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         self.sim = Simulator(cfg)          # reuse data/partition/capability
-        self.rng = np.random.default_rng(cfg.seed)
         self.caesar_state = CA.init_state(
             jnp.asarray(self.sim.volumes, jnp.float32),
             jnp.asarray(self.sim.label_dist), cfg.caesar)
@@ -126,15 +132,16 @@ class LegacyEngine:
         sim = self.sim
         ccfg = cfg.caesar
         n, b_max, tau = cfg.n_clients, ccfg.b_max, ccfg.tau
-        n_part = max(1, int(round(cfg.participation * n)))
+        n_part = sim.n_part
         global_p = sim.params0
         local_p = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape), sim.params0)
         walls = []
-        sim.rng = self.rng      # drive _sample_batches from our stream
         for t in range(1, (rounds or cfg.rounds) + 1):
             w0 = time.perf_counter()
-            parts = self.rng.choice(n, n_part, replace=False)
+            # same per-round SeedSequence streams as the fused engine, so
+            # both engines train on identical participants and batches
+            parts, xs, ys = sim._prefetch_round(t)
             mu, bw_d, bw_u = sim.cap.snapshot(t)
             from repro.optim import sgd as SGD
             lr = float(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
@@ -147,8 +154,7 @@ class LegacyEngine:
             theta_u = np.asarray(plan.theta_u)[parts]
             batch = np.asarray(plan.batch)[parts]
             taus = np.full(n_part, tau)
-            xs, ys, ws, ims = sim._sample_batches(parts, batch, taus,
-                                                  b_max, tau)
+            ws, ims = sim._batch_masks(batch, taus, b_max, tau)
             lp_sel = jax.tree.map(lambda a: a[parts], local_p)
             ups, new_lp, down_bits, up_bits, gnorms = self._round_vmapped(
                 global_p, lp_sel, xs, ys, ws, ims, lr,
@@ -215,6 +221,10 @@ def bench_engines(tau: int, n_clients: int, rounds: int) -> dict:
     t0 = time.perf_counter()
     h = sim.run()         # raw per-round walls land in History.wall_per_round
     fused_e2e = time.perf_counter() - t0
+    # same engine without the sampling/step overlap, to isolate the
+    # double-buffered pipeline's contribution (same-seed identical output)
+    h_sync = Simulator(bench_config(tau, n_clients, rounds,
+                                    pipelined=False)).run()
     leg = LegacyEngine(cfg)          # seed engine on identical data/seeds
     t0 = time.perf_counter()
     walls, tree = leg.run()
@@ -224,16 +234,22 @@ def bench_engines(tau: int, n_clients: int, rounds: int) -> dict:
     # engines' medians run over the same per-round population
     seed_ms = _median_steady(walls) * 1e3
     fused_ms = _median_steady(h.wall_per_round) * 1e3
+    sync_ms = _median_steady(h_sync.wall_per_round) * 1e3
     return {
         "tau": tau, "n_clients": n_clients, "rounds": rounds,
         "n_params": sim.n_params, "backend": sim.backend,
+        "chunk": sim.executor.chunk,
         "seed_round_ms": seed_ms,
         "fused_round_ms": fused_ms,
+        "sync_round_ms": sync_ms,
         "speedup": seed_ms / fused_ms,
+        "pipeline_speedup": sync_ms / fused_ms,
         "seed_e2e_s": seed_e2e,
         "fused_e2e_s": fused_e2e,
+        "compile_s": h.compile_s,
         "seed_final_acc": seed_acc,
         "fused_final_acc": h.accuracy[-1] if h.accuracy else float("nan"),
+        "pipelined_equals_sync": h.accuracy == h_sync.accuracy,
     }
 
 
@@ -262,6 +278,11 @@ def main():
           f"speedup={primary['speedup']:.2f}x "
           f"(seed {primary['seed_round_ms']:.0f}ms → fused "
           f"{primary['fused_round_ms']:.0f}ms)")
+    print(f"bench_round/pipeline_tau1,{primary['fused_round_ms'] * 1e3:.0f},"
+          f"overlap={primary['pipeline_speedup']:.2f}x "
+          f"(sync {primary['sync_round_ms']:.0f}ms → pipelined "
+          f"{primary['fused_round_ms']:.0f}ms; same-seed parity="
+          f"{primary['pipelined_equals_sync']})")
 
     if not args.smoke:
         heavy = bench_engines(tau=5, n_clients=clients, rounds=rounds)

@@ -5,12 +5,14 @@ Two studies live here:
 * ``run()`` — the paper-figure reproduction (30/60/100 clients, CPU budget),
   unchanged CSV/JSON conventions.
 * the **round-engine scale study** (``--scale`` / ``--smoke``) — 500/1000/
-  2000-client cohorts through the chunked/sharded engine (DESIGN.md §7),
-  emitting ``BENCH_scale.json`` with peak host memory and s/round per scale
-  point plus chunked-vs-unchunked same-seed trajectory parity. Every point
-  runs in a **fresh subprocess** so ``ru_maxrss`` (a process-lifetime
-  high-water mark) is a clean per-point measurement; the sharded point
-  forces a multi-device host platform via XLA_FLAGS.
+  2000-client cohorts through the pipelined + auto-chunked engine
+  (DESIGN.md §7), emitting ``BENCH_scale.json`` with peak host memory and
+  s/round per scale point plus same-seed trajectory parities
+  (pipelined-vs-synchronous, auto-vs-explicit chunk); out-of-tolerance
+  parity fails the run, which is the CI gate. Every point runs in a
+  **fresh subprocess** so ``ru_maxrss`` (a process-lifetime high-water
+  mark) is a clean per-point measurement; the sharded point forces a
+  multi-device host platform via XLA_FLAGS.
 """
 from __future__ import annotations
 
@@ -55,30 +57,62 @@ def run(dataset="har", log=lambda s: None):
 
 def run_point(n_clients: int, chunk_size, rounds: int,
               participation: float = 0.1, sharded: bool = False,
-              seed: int = 0, data_scale: float = 1.0, tau: int = 2) -> dict:
+              seed: int = 0, data_scale: float = 1.0, tau: int = 2,
+              pipelined: bool = True, dataset: str = "har",
+              chunk_budget_mb: float = 1024.0,
+              compare_pipeline: bool = False) -> dict:
     """One scale point, measured in THIS process (run it in a fresh
     subprocess for a clean ru_maxrss high-water mark). Evaluates EVERY
     round so the recorded accuracy list is a genuine trajectory (the
-    chunked-vs-unchunked parity check compares all of it, not just the
-    final point)."""
+    parity checks compare all of it, not just the final point).
+    ``chunk_size`` follows SimConfig: None ⇒ auto_chunk, 0 ⇒ one chunk.
+
+    ``compare_pipeline=True`` additionally runs the SYNCHRONOUS driver
+    AFTER the measured (pipelined) run in the same process — back-to-back
+    medians on the same warm machine state resolve overlap gains that
+    inter-subprocess noise would bury; running the measured point first
+    keeps its peak_rss_mb clean (ru_maxrss is a process-lifetime high-water
+    mark the second run could only inflate), and the second-run page-cache
+    warmth favors the sync baseline, i.e. biases the reported speedup
+    conservatively. Reports sync_s_per_round / pipeline_speedup /
+    pipeline_parity (same-seed trajectory agreement between the two)."""
+    import gc
+
+    from repro.core import compression as C
     from repro.core.caesar import CaesarConfig
     from repro.fl.simulation import SimConfig, Simulator
-    cfg = SimConfig(dataset="har", scheme="caesar", n_clients=n_clients,
-                    participation=participation, rounds=rounds,
-                    data_scale=data_scale, eval_every=1, seed=seed,
-                    caesar=CaesarConfig(tau=tau, b_max=16),
-                    chunk_size=chunk_size, sharded=sharded)
+
+    def build(pipe):
+        return SimConfig(dataset=dataset, scheme="caesar",
+                         n_clients=n_clients, participation=participation,
+                         rounds=rounds, data_scale=data_scale, eval_every=1,
+                         seed=seed, caesar=CaesarConfig(tau=tau, b_max=16),
+                         chunk_size=chunk_size,
+                         chunk_budget_mb=chunk_budget_mb,
+                         pipelined=pipe, sharded=sharded)
+
+    def median_warm(h):
+        walls = h.wall_per_round[1:] if len(h.wall_per_round) > 1 \
+            else h.wall_per_round
+        return statistics.median(walls)
+
+    out = {}
     t0 = time.perf_counter()
-    sim = Simulator(cfg)
+    sim = Simulator(build(pipelined))
     h = sim.run()
     wall = time.perf_counter() - t0
-    walls = h.wall_per_round[1:] if len(h.wall_per_round) > 1 \
-        else h.wall_per_round
-    return {
-        "n_clients": n_clients, "participants": sim.n_part,
-        "chunk_size": chunk_size, "sharded": sharded, "n_dev": sim.n_dev,
+    out.update({
+        "dataset": dataset, "n_clients": n_clients,
+        "participants": sim.n_part,
+        "chunk_size": chunk_size, "chunk": sim.executor.chunk,
+        "chunk_budget_mb": chunk_budget_mb,
+        "chunk_workset_mb": sim.executor.chunk * C.ROUND_WORKSET_ARRAYS
+        * 4 * sim.n_params / 2 ** 20,
+        "pipelined": pipelined,
+        "sharded": sharded, "n_dev": sim.n_dev,
         "rounds": rounds, "n_params": sim.n_params,
-        "s_per_round": statistics.median(walls),
+        "s_per_round": median_warm(h),
+        "compile_s": h.compile_s,
         # ru_maxrss is KB on Linux
         "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
         / 1024.0,
@@ -88,7 +122,21 @@ def run_point(n_clients: int, chunk_size, rounds: int,
         "traffic_gb": h.traffic_bits[-1] / 8e9,
         "avg_waiting_s": h.waiting[-1],
         "wall_s": wall,
-    }
+    })
+    if compare_pipeline:
+        del sim
+        gc.collect()       # drop the measured run's buffers first
+        sim_s = Simulator(build(False))
+        h_sync = sim_s.run()
+        out["sync_s_per_round"] = median_warm(h_sync)
+        out["pipeline_speedup"] = out["sync_s_per_round"] / out["s_per_round"]
+        out["pipeline_parity"] = {
+            "max_acc_diff": max(abs(a - b) for a, b in
+                                zip(h.accuracy, h_sync.accuracy)),
+            "traffic_rel_diff": abs(h.traffic_bits[-1]
+                                    - h_sync.traffic_bits[-1])
+            / max(h.traffic_bits[-1], 1e-12)}
+    return out
 
 
 def _subprocess_point(extra_env=None, **kw) -> dict:
@@ -114,46 +162,82 @@ def _parity(a: dict, b: dict) -> dict:
             / max(a["traffic_gb"], 1e-12)}
 
 
+# same-seed runs must agree to eval quantization noise; CI fails above this
+PARITY_ACC_TOL = 5e-3
+PARITY_TRAFFIC_TOL = 1e-5
+
+
+def _tag(p: dict) -> str:
+    chunk = ("auto" + str(p["chunk"]) if p["chunk_size"] is None
+             else ("chunk" + str(p["chunk_size"]) if p["chunk_size"]
+                   else "unchunked"))
+    return (f"{p.get('dataset', 'har')}/n{p['n_clients']}/"
+            f"P{p['participants']}/{chunk}"
+            + ("/sync" if not p.get("pipelined", True) else "")
+            + ("/sharded" if p["sharded"] else ""))
+
+
 def scale_bench(smoke: bool = False) -> dict:
     results: dict = {"config": {"smoke": smoke, "dataset": "har"}}
-    if smoke:   # CI: one small chunked/unchunked pair, 2 rounds
-        base = dict(rounds=2, participation=0.2, data_scale=0.25, tau=1)
-        unchunked = _subprocess_point(n_clients=60, chunk_size=None, **base)
-        chunked = _subprocess_point(n_clients=60, chunk_size=4, **base)
-        points = [unchunked, chunked]
+    if smoke:   # CI: pipelined+auto-chunk path vs its sync/explicit twins
+        # 4 rounds ⇒ 3 warm wall samples per driver — with fewer, the
+        # overlap number is one noisy sample and meaningless even as smoke
+        base = dict(rounds=4, participation=0.2, data_scale=0.25, tau=1,
+                    n_clients=60)
+        pipelined = _subprocess_point(chunk_size=None,
+                                      compare_pipeline=True, **base)
+        explicit = _subprocess_point(chunk_size=4, **base)
+        points = [pipelined, explicit]
+        results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
+        results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
     else:
-        # Fig.-10-style 500/1000/2000 scale sweep (10% participation), plus
-        # a DENSE 1000-client cohort (50% participation ⇒ P=500) measured
-        # unchunked AND chunked: at P=500 the [P, n_params] round
-        # intermediates (~4×330 MB) dominate the process baseline, so the
-        # peak-RSS delta isolates exactly what chunking bounds. The
-        # [n, n_params] local buffer is O(n) by design and reported
-        # separately as local_buf_mb.
+        # Fig.-10-style 500/1000/2000 scale sweep (10% participation, now
+        # pipelined + auto-chunk), plus a DENSE 1000-client cohort (50%
+        # participation ⇒ P=500) measured two ways: synchronous-then-
+        # pipelined back-to-back IN ONE subprocess (same auto chunk — the
+        # sampling/step overlap is ~1% of a compute-bound dense round, so
+        # cross-subprocess noise would bury it) and auto vs explicit
+        # chunk=48-MB-budget (same-seed parity + RSS budget). At P=500 the
+        # [P, n_params] round intermediates (~4×330 MB unchunked) dominate
+        # the process baseline, so peak RSS shows what the auto-chunk
+        # budget bounds. The [n, n_params] local buffer is O(n) by design,
+        # reported separately as local_buf_mb.
         base = dict(rounds=4, participation=0.1)
-        dense = dict(rounds=3, participation=0.5, n_clients=1000)
-        unchunked = _subprocess_point(chunk_size=None, **dense)
-        chunked = _subprocess_point(chunk_size=25, **dense)
+        dense = dict(participation=0.5, n_clients=1000,
+                     chunk_budget_mb=48.0)
+        # identical rounds: _parity compares cumulative traffic at the end
+        pipelined = _subprocess_point(chunk_size=None, rounds=6,
+                                      compare_pipeline=True, **dense)
+        explicit = _subprocess_point(chunk_size=25, rounds=6, **dense)
         points = [
-            _subprocess_point(n_clients=500, chunk_size=25, **base),
-            _subprocess_point(n_clients=1000, chunk_size=25, **base),
-            _subprocess_point(n_clients=2000, chunk_size=25, **base),
-            unchunked, chunked,
+            _subprocess_point(n_clients=500, chunk_size=None, **base),
+            _subprocess_point(n_clients=1000, chunk_size=None, **base),
+            _subprocess_point(n_clients=2000, chunk_size=None, **base),
+            pipelined, explicit,
             # sharded: same 1000-client cohort over 4 forced host devices
             _subprocess_point(
-                n_clients=1000, chunk_size=25, sharded=True,
+                n_clients=1000, chunk_size=None, sharded=True,
                 extra_env={"XLA_FLAGS":
                            "--xla_force_host_platform_device_count=4"},
                 **base),
+            # bigger model (cifar10 CNN) through the same pipelined +
+            # auto-chunk path
+            _subprocess_point(dataset="cifar10", n_clients=200,
+                              chunk_size=None, rounds=3, participation=0.1,
+                              data_scale=0.2, tau=2),
         ]
+        results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
+        results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
+        results["pipeline_speedup_dense"] = pipelined["pipeline_speedup"]
     for p in points:
-        tag = (f"n{p['n_clients']}/P{p['participants']}/"
-               f"{'chunk' + str(p['chunk_size']) if p['chunk_size'] else 'unchunked'}"
-               + ("/sharded" if p["sharded"] else ""))
-        print(f"fig10_scale/{tag},{p['s_per_round'] * 1e6:.0f},"
+        extra = (f";overlap={p['pipeline_speedup']:.3f}x"
+                 f"(sync {p['sync_s_per_round']:.2f}s)"
+                 if "pipeline_speedup" in p else "")
+        print(f"fig10_scale/{_tag(p)},{p['s_per_round'] * 1e6:.0f},"
               f"peak_rss_mb={p['peak_rss_mb']:.0f};"
-              f"acc={p['final_acc']:.3f};wait_s={p['avg_waiting_s']:.1f}")
+              f"acc={p['final_acc']:.3f};wait_s={p['avg_waiting_s']:.1f}"
+              + extra)
     results["points"] = points
-    results["parity_chunked_vs_unchunked"] = _parity(unchunked, chunked)
     payload = json.dumps(results, indent=1, default=float)
     name = "BENCH_scale_smoke.json" if smoke else "BENCH_scale.json"
     (ROOT / name).write_text(payload)
@@ -161,6 +245,15 @@ def scale_bench(smoke: bool = False) -> dict:
     out2.mkdir(parents=True, exist_ok=True)
     (out2 / name).write_text(payload)
     print(f"wrote {name}")
+    # parity is a correctness gate, not a report: out-of-tolerance deltas
+    # fail the run (CI runs --smoke and relies on this exit code)
+    bad = {k: v for k, v in results.items() if k.startswith("parity_")
+           and (v["max_acc_diff"] > PARITY_ACC_TOL
+                or v["traffic_rel_diff"] > PARITY_TRAFFIC_TOL)}
+    if bad:
+        raise SystemExit(f"scale parity outside tolerance "
+                         f"(acc>{PARITY_ACC_TOL} or "
+                         f"traffic>{PARITY_TRAFFIC_TOL}): {bad}")
     return results
 
 

@@ -19,7 +19,22 @@ import jax.numpy as jnp
 def round_times(theta_d: jax.Array, theta_u: jax.Array, q_bits: float,
                 bw_down: jax.Array, bw_up: jax.Array, tau: int,
                 batch: jax.Array, mu: jax.Array) -> jax.Array:
-    """Eq. 7 per device. Bandwidths in bits/s, μ in s/sample."""
+    """Eq. 7 per device. Bandwidths in bits/s, μ in s/sample.
+
+    This is THE round-time model: the Eq. 8–9 optimizer equalizes it and
+    `Simulator.run` measures simulated time/idle-waiting with it (traffic,
+    by contrast, is accounted with actual payload bits) — keeping one rate
+    model end to end is what makes the planned barrier equalization show
+    up in the reported metric. ``tau`` may be a scalar or a per-device
+    array (baseline policies adapt local iterations).
+
+    Caveat, recorded deliberately: the paper writes Eq. 7's comm term as
+    θ·Q/β and we keep it verbatim, but under this repo's θ-as-compressed-
+    fraction convention that term is NOT proportional to the wire payload
+    (hybrid payload = ((1−θ)+θ/32)·Q shrinks as θ grows; θ=0 ⇒ comm time 0
+    despite a full-precision transfer). Time/waiting therefore follow the
+    paper's planning model, while transmitted bits remain a separate,
+    payload-faithful metric — do not cross-derive one from the other."""
     comm = theta_d * (q_bits / bw_down) + theta_u * (q_bits / bw_up)
     return comm + tau * batch.astype(jnp.float32) * mu
 

@@ -229,13 +229,54 @@ def chunk_layout(n_items: int, chunk: int | None
     participants in chunks of ``chunk`` via a lax.scan so the [P, n_params]
     compress/recover/train intermediates are bounded by chunk × n_params.
     ``chunk`` is clamped to [1, n_items]; None/0 means one chunk of all
-    items. The trailing partial chunk is padded (padded rows carry a zero
-    mask and an out-of-range scatter index, so they never touch the
+    items (callers that want a chunk *picked for them* resolve it first via
+    `auto_chunk`). The trailing partial chunk is padded (padded rows carry a
+    zero mask and an out-of-range scatter index, so they never touch the
     buffers).
     """
     chunk = max(1, min(chunk, n_items) if chunk else n_items)
     n_chunks = -(-n_items // chunk)
     return chunk, n_chunks * chunk, n_chunks
+
+
+# Live [chunk, n_params] f32 intermediates per in-flight participant in the
+# round step (kept / recovered / delta / upload — sign is i8, counted in the
+# 4th array's slack). Matches the measured ~4 × P × n_params × 4B unchunked
+# working set (DESIGN.md §7).
+ROUND_WORKSET_ARRAYS = 4
+MIN_AUTO_CHUNK = 8          # below this, scan trip overhead beats locality
+# Locality cap: keep the per-chunk working set near last-level-cache size.
+# Measured on the 1000-client/P=500 HAR point (164k params): a budget-only
+# chunk of 204 runs the round 2× SLOWER than chunk 25 — once the working
+# set spills L3, bigger chunks only add cache misses. 64 MB ≈ the sweet
+# spot (chunk 25 at 164k params) with headroom on server parts.
+CACHE_TARGET_MB = 64.0
+
+
+def auto_chunk(n_params: int, n_items: int,
+               budget_mb: float = 1024.0) -> int:
+    """Pick a participant chunk size from the model size and a host budget.
+
+    The round step keeps ~`ROUND_WORKSET_ARRAYS` f32 arrays of shape
+    [chunk, n_params] live (DESIGN.md §7), so the chunk is sized to fit the
+    TIGHTER of the RSS budget and the cache-locality target:
+
+        chunk = min(budget_mb, CACHE_TARGET_MB)·2²⁰
+                / (ROUND_WORKSET_ARRAYS · 4 · n_params)
+
+    clamped to [min(MIN_AUTO_CHUNK, n_items), n_items]: tiny models take the
+    whole cohort in one chunk (the PR-1 single-vmap engine), huge models
+    degrade to at most MIN_AUTO_CHUNK participants at a time before giving
+    up the vmap batching entirely. Consulted by `RoundExecutor` when
+    ``SimConfig.chunk_size is None``; ``chunk_size=0`` forces one chunk.
+    """
+    if n_items <= 0:
+        raise ValueError(f"n_items must be positive, got {n_items}")
+    if n_params <= 0:
+        raise ValueError(f"n_params must be positive, got {n_params}")
+    bytes_per_item = ROUND_WORKSET_ARRAYS * 4 * n_params
+    chunk = int(min(budget_mb, CACHE_TARGET_MB) * 2 ** 20 // bytes_per_item)
+    return max(min(MIN_AUTO_CHUNK, n_items), min(chunk, n_items))
 
 
 def tree_hybrid_roundtrip(tree: Pytree, local_tree: Pytree,

@@ -21,20 +21,34 @@ class CapabilityModel:
     seed: int = 0
 
     def __post_init__(self):
-        rng = np.random.default_rng(self.seed)
+        rng = np.random.default_rng(np.random.SeedSequence(self.seed))
         # persistent device tier (hardware class), log-uniform
         self._tier = np.exp(rng.uniform(np.log(MU_RANGE_S[0]),
                                         np.log(MU_RANGE_S[1]),
                                         self.n_devices))
         self._bw_tier = rng.uniform(0.3, 1.0, self.n_devices)
 
+    def _stream(self, kind: int, step: int) -> np.random.Generator:
+        """Per-(seed, kind, step) generator via the SeedSequence spawn tree.
+
+        ``SeedSequence(seed, spawn_key=(kind, step))`` is the stateless
+        spelling of ``SeedSequence(seed).spawn(...)[kind].spawn(...)[step]``:
+        every (seed, kind, step) triple keys an independent stream, unlike
+        the former arithmetic seeds, which collided both across seeds
+        ((seed=0, t=7919) and (seed=1, t=0) drew identical bandwidth under
+        ``seed*7919 + t``) and across the mode/bandwidth families (for
+        seed=0 both reduced to plain ``epoch`` / ``t``).
+        """
+        return np.random.default_rng(
+            np.random.SeedSequence(self.seed, spawn_key=(kind, step)))
+
     def snapshot(self, t: int):
         """Per-round (mu [n] s/sample, bw_down [n] b/s, bw_up [n] b/s)."""
         epoch = t // MODE_RESHUFFLE_PERIOD
-        rng = np.random.default_rng(self.seed * 100003 + epoch)
+        rng = self._stream(0, epoch)
         mode = np.exp(rng.normal(0.0, 0.5, self.n_devices))   # work-mode factor
         mu = np.clip(self._tier * mode, *MU_RANGE_S)
-        rng_r = np.random.default_rng(self.seed * 7919 + t)
+        rng_r = self._stream(1, t)
         lo, hi = BW_RANGE_BPS
         bw_d = np.clip(self._bw_tier * rng_r.uniform(lo, hi, self.n_devices),
                        lo, hi)

@@ -18,29 +18,45 @@ The simulator is a **layered round engine** (DESIGN.md §1, §7):
   a single [n_clients, n_params] buffer, and download-compress → recover →
   τ-step scan → upload-top-k → aggregate → scatter is ONE jitted step with
   donated buffers. Participants are processed in fixed-size **chunks** via a
-  lax.scan that carries (local buffer, upload accumulator), so the
-  [P, n_params] intermediates are bounded by ``chunk_size × n_params``
-  regardless of cohort size. The optional **sharded** mode places the local
-  buffer's rows and the participant chunks across local devices with a
-  shard_map over the "data" axis (launch/mesh.py); upload sums cross shards
-  via psum.
+  lax.scan that carries (local buffer, EF buffer, upload accumulator), so
+  the [P, n_params] intermediates are bounded by ``chunk_size × n_params``
+  regardless of cohort size; ``chunk_size=None`` auto-tunes the chunk from
+  the model size and a host working-set budget (``core.compression.
+  auto_chunk``). The optional **sharded** mode places the buffers' rows and
+  the participant chunks across the "data" mesh (launch/mesh.py — all
+  addressable devices, spanning hosts after ``launch.mesh.init_distributed``
+  when ``SimConfig.multi_host``); upload sums cross shards via psum.
+* **Pipelined driver** (`Simulator.run`) — host batch sampling for round
+  t+1 (participant draw + training-batch gather, pure numpy) runs on a
+  worker thread while the device executes round t. Every round draws from
+  its own ``np.random.SeedSequence(seed, spawn_key=(2, t))`` stream, so the
+  pipelined and synchronous (``SimConfig.pipelined=False``) loops consume
+  identical randomness and are same-seed identical.
 
 Thresholds come from the O(n) histogram operators (``core.compression.
 fused_*``) behind a backend switch resolved once per simulation (§3–4).
+
+Accounting keeps ONE rate model end to end: simulated round time and
+barrier waiting use the Eq.-7 θ·Q/β model the Eq. 8–9 planner equalizes
+(core/batchsize.py), while traffic is accounted with the actual hybrid /
+top-k payload bits — so the planned barrier equalization is visible in the
+measured idle-wait instead of being washed out by a second, inconsistent
+time model.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import batchsize as BS
 from repro.core import caesar as CA
 from repro.core import compression as C
 from repro.data import partition, synthetic
@@ -69,15 +85,28 @@ class SimConfig:
     target_accuracy: Optional[float] = None
     # compression-operator backend: auto | pallas | interpret | jnp
     backend: str = "auto"
-    # execution layer (DESIGN.md §7): participants per chunk. None ⇒ one
-    # chunk of all participants (the PR-1 single-vmap engine); an int bounds
-    # the per-round [P, n_params] working set at chunk_size × n_params.
+    # execution layer (DESIGN.md §7): participants per chunk. None ⇒
+    # auto-tuned from n_params, the cohort, and chunk_budget_mb
+    # (core.compression.auto_chunk); 0 ⇒ one chunk of all participants (the
+    # PR-1 single-vmap engine); an int bounds the per-round [P, n_params]
+    # working set at chunk_size × n_params.
     chunk_size: Optional[int] = None
+    # host working-set budget (MB) the auto-tuned chunk targets; ignored
+    # when chunk_size is given explicitly.
+    chunk_budget_mb: float = 1024.0
+    # overlap host batch sampling for round t+1 with the device step for
+    # round t (worker thread; same-seed identical to the synchronous loop —
+    # every round owns a SeedSequence-derived RNG stream either way).
+    pipelined: bool = True
     # shard the [n_clients, n_params] local buffer + participant chunks over
-    # the local devices ("data" axis, DESIGN.md §7). Requires n_clients
-    # divisible by the device count; participants are drawn stratified per
-    # shard so every device owns its participants' buffer rows.
+    # the "data" mesh (DESIGN.md §7). Requires n_clients divisible by the
+    # device count; participants are drawn stratified per shard so every
+    # device owns its participants' buffer rows.
     sharded: bool = False
+    # initialize jax.distributed and build the "data" mesh over every
+    # host's devices (process-local buffer rows, psum unchanged). Requires
+    # sharded=True; a no-op single-process falls back to the local mesh.
+    multi_host: bool = False
     # preliminary-study variants (Fig. 1): compress only one direction
     fic_down_only: bool = False
     fic_up_only: bool = False
@@ -88,17 +117,20 @@ class SimConfig:
 @dataclasses.dataclass
 class History:
     """Eval-aligned series: every list below has one entry per eval round
-    (``rounds[i]`` is the round number of entry i). ``waiting``/``wall`` are
-    RUNNING MEANS over all rounds simulated so far — per-round raw samples
-    live in the ``*_per_round`` lists (one entry per round)."""
+    (``rounds[i]`` is the round number of entry i). ``waiting`` is a RUNNING
+    MEAN over all rounds simulated so far; ``wall`` is the running WARM mean
+    — round 1 (which folds the one-time XLA compile into its wall time) is
+    excluded and reported separately as ``compile_s``. Per-round raw samples
+    (round 1 included) live in the ``*_per_round`` lists."""
     rounds: list = dataclasses.field(default_factory=list)
     sim_time: list = dataclasses.field(default_factory=list)      # cumulative s
     traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
     accuracy: list = dataclasses.field(default_factory=list)
     waiting: list = dataclasses.field(default_factory=list)       # running mean s
-    wall: list = dataclasses.field(default_factory=list)          # running mean s
+    wall: list = dataclasses.field(default_factory=list)          # warm mean s
     waiting_per_round: list = dataclasses.field(default_factory=list)
     wall_per_round: list = dataclasses.field(default_factory=list)
+    compile_s: float = 0.0     # round-1 wall (jit compile + first dispatch)
 
     def summary(self) -> dict:
         return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
@@ -192,24 +224,39 @@ class RoundExecutor:
     """The fused flat-parameter round step, chunked and optionally sharded.
 
     One jitted step per simulation (donated [n_params] global vector +
-    [n_clients, n_params] local buffer). Internally a lax.scan over
-    fixed-size participant chunks carries (local buffer, upload-sum): each
-    chunk gathers its rows, runs the vmapped per-participant round, masks
-    its upload contribution into the accumulator and scatters its rows back
-    — so only [chunk, n_params] intermediates are ever live. In sharded
+    [n_clients, n_params] local buffer + EF buffer). Internally a lax.scan
+    over fixed-size participant chunks carries (local buffer, EF buffer,
+    upload-sum): each chunk gathers its rows, runs the vmapped
+    per-participant round, masks its upload contribution into the
+    accumulator and scatters its rows back — so only [chunk, n_params]
+    intermediates are ever live. ``chunk_size=None`` resolves the chunk via
+    `core.compression.auto_chunk` against ``chunk_budget_mb``. In sharded
     mode the same scan runs inside a shard_map over the 1-D "data" mesh:
     every device owns ``n_clients / n_dev`` buffer rows and its own
     participants (grouped + padded host-side), and the upload sums cross
-    shards with a psum.
+    shards with a psum. On a multi-process (multi-host) mesh the grouped
+    inputs are assembled per process (`launch.mesh.host_local_array`) and
+    the per-participant outputs allgathered (`launch.mesh.fetch_global`);
+    the device math is identical.
+
+    The error-feedback residual (``CaesarConfig.use_error_feedback``) rides
+    the same machinery: a [n_clients, ef_width] buffer whose rows are
+    gathered/scattered alongside the local models, ``ef_width = n_params``
+    when EF is on and 0 when off — the disabled path carries a zero-width
+    buffer, so there is exactly one compiled step either way and the
+    residual adds no cost unless enabled.
     """
 
     def __init__(self, cfg: SimConfig, apply_fn, spec: C.FlatSpec,
-                 backend: str, quantize: bool, n_part: int, mesh=None):
+                 backend: str, quantize: bool, n_part: int, mesh=None,
+                 use_ef: bool = False):
         self.cfg = cfg
         self.apply_fn = apply_fn
         self.spec = spec
         self.backend = backend
         self.quantize = quantize
+        self.use_ef = use_ef
+        self.ef_width = spec.n_params if use_ef else 0
         self.mesh = mesh
         self.n_clients = cfg.n_clients
         self.n_dev = mesh.shape["data"] if mesh is not None else 1
@@ -218,8 +265,12 @@ class RoundExecutor:
                              f"over {self.n_dev} shards")
         self.rows_per_shard = self.n_clients // self.n_dev
         self.p_shard = n_part // self.n_dev
+        chunk_size = cfg.chunk_size
+        if chunk_size is None:
+            chunk_size = C.auto_chunk(spec.n_params, self.p_shard,
+                                      cfg.chunk_budget_mb)
         self.chunk, self.p_pad, self.n_chunks = C.chunk_layout(
-            self.p_shard, cfg.chunk_size)
+            self.p_shard, chunk_size)
         self._build()
 
     # -- jit construction ---------------------------------------------------
@@ -234,6 +285,7 @@ class RoundExecutor:
         # branches, not lax.cond: the compiled step contains only one path.
         use_recovery = cfg.scheme == "caesar"
         quantize = self.quantize
+        use_ef = self.use_ef
 
         def ce_loss(params, x, y, w):
             logits = apply_fn(params, x)
@@ -251,8 +303,8 @@ class RoundExecutor:
             out, _ = jax.lax.scan(step, params, (xs, ys, ws, iter_mask))
             return out
 
-        def participant_round(global_f, g_cdf, g_max, local_f, xs, ys, ws,
-                              iter_mask, lr, theta_d, theta_u):
+        def participant_round(global_f, g_cdf, g_max, local_f, ef_row, xs,
+                              ys, ws, iter_mask, lr, theta_d, theta_u):
             """One participant, entirely on flat [n_params] vectors."""
             # --- download: per-device threshold is an O(1) lookup in the
             # shared global-model cdf (one histogram per ROUND, not per device)
@@ -276,21 +328,26 @@ class RoundExecutor:
             flat_fin = C.flatten_vector(w_fin, spec)
             delta = w_init - flat_fin
             gnorm = jnp.linalg.norm(delta)
-            # --- upload
-            thr_u = C.fused_threshold(delta, theta_u, backend)
+            # --- upload (EF: compress the residual-corrected delta, stash
+            # what the compressor dropped back into the participant's row)
+            target = delta + ef_row if use_ef else delta
+            thr_u = C.fused_threshold(target, theta_u, backend)
             if quantize:   # ProWD-style: 1-bit masked elements, sign·mean
-                k2, s2, c2, ss2, mx2 = C.fused_compress(delta, thr_u, backend)
+                k2, s2, c2, ss2, mx2 = C.fused_compress(target, thr_u,
+                                                        backend)
                 up = jnp.where(s2 != 0,
                                s2.astype(jnp.float32)
                                * (ss2 / jnp.maximum(c2, 1)), k2)
                 up_bits = C.hybrid_payload_bits(n_params, c2)
             else:          # top-k sparsification
-                up, up_bits = C.topk_sparsify_at(delta, thr_u)
-            return up, flat_fin, down_bits, up_bits, gnorm
+                up, up_bits = C.topk_sparsify_at(target, thr_u)
+            new_ef = target - up if use_ef else ef_row
+            return up, flat_fin, new_ef, down_bits, up_bits, gnorm
 
-        def chunked_scan(global_f, g_cdf, g_max, buf, parts_l, pmask, xs, ys,
-                         ws, ims, lr, theta_d, theta_u):
-            """Scan over participant chunks; carry = (buffer, upload-sum).
+        def chunked_scan(global_f, g_cdf, g_max, buf, ef_buf, parts_l, pmask,
+                         xs, ys, ws, ims, lr, theta_d, theta_u):
+            """Scan over participant chunks; carry = (buffer, EF buffer,
+            upload-sum).
 
             ``parts_l`` are buffer-LOCAL row indices [p_pad]; padded entries
             carry an out-of-range index (scatter drops them, the clamped
@@ -302,80 +359,91 @@ class RoundExecutor:
                                         theta_d, theta_u)))
 
             def chunk_step(carry, c):
-                buf, up_sum = carry
+                buf, ef_buf, up_sum = carry
                 p_c, m_c, xs_c, ys_c, ws_c, ims_c, td_c, tu_c = c
                 lp_sel = buf[p_c]                       # [chunk, n_params]
-                ups, new_lp, db, ub, gn = jax.vmap(
+                ef_sel = ef_buf[p_c]                    # [chunk, ef_width]
+                ups, new_lp, new_ef, db, ub, gn = jax.vmap(
                     participant_round,
-                    in_axes=(None, None, None, 0, 0, 0, 0, 0, None, 0, 0))(
-                    global_f, g_cdf, g_max, lp_sel, xs_c, ys_c, ws_c, ims_c,
-                    lr, td_c, tu_c)
+                    in_axes=(None, None, None, 0, 0, 0, 0, 0, 0, None, 0,
+                             0))(
+                    global_f, g_cdf, g_max, lp_sel, ef_sel, xs_c, ys_c,
+                    ws_c, ims_c, lr, td_c, tu_c)
                 up_sum = up_sum + jnp.sum(ups * m_c[:, None], axis=0)
                 buf = buf.at[p_c].set(
                     jnp.where(m_c[:, None] > 0, new_lp, lp_sel))
-                return (buf, up_sum), (db, ub, gn)
+                ef_buf = ef_buf.at[p_c].set(
+                    jnp.where(m_c[:, None] > 0, new_ef, ef_sel))
+                return (buf, ef_buf, up_sum), (db, ub, gn)
 
-            (buf, up_sum), (db, ub, gn) = jax.lax.scan(
-                chunk_step, (buf, jnp.zeros(n_params, jnp.float32)), inp)
-            return buf, up_sum, db.reshape(-1), ub.reshape(-1), gn.reshape(-1)
+            (buf, ef_buf, up_sum), (db, ub, gn) = jax.lax.scan(
+                chunk_step, (buf, ef_buf, jnp.zeros(n_params, jnp.float32)),
+                inp)
+            return (buf, ef_buf, up_sum, db.reshape(-1), ub.reshape(-1),
+                    gn.reshape(-1))
 
         if self.mesh is None:
-            def round_step(global_f, local_buf, parts, pmask, xs, ys, ws,
-                           ims, lr, theta_d, theta_u):
+            def round_step(global_f, local_buf, ef_buf, parts, pmask, xs,
+                           ys, ws, ims, lr, theta_d, theta_u):
                 g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
-                buf, up_sum, db, ub, gn = chunked_scan(
-                    global_f, g_cdf, g_max, local_buf, parts, pmask, xs, ys,
-                    ws, ims, lr, theta_d, theta_u)
+                buf, ef_buf, up_sum, db, ub, gn = chunked_scan(
+                    global_f, g_cdf, g_max, local_buf, ef_buf, parts, pmask,
+                    xs, ys, ws, ims, lr, theta_d, theta_u)
                 # aggregate (Algorithm 1 line 13) over the valid participants
                 new_global = global_f - up_sum / jnp.maximum(jnp.sum(pmask),
                                                              1.0)
-                return new_global, buf, db, ub, gn
+                return new_global, buf, ef_buf, db, ub, gn
 
-            # donating the global vector and the [n, n_params] local buffer
-            # lets XLA scatter the participants' rows in place instead of
-            # copying the whole buffer every round (~60ms/round at 100×164k
-            # on CPU)
-            self._round_step = jax.jit(round_step, donate_argnums=(0, 1))
+            # donating the global vector and the [n, n_params] local/EF
+            # buffers lets XLA scatter the participants' rows in place
+            # instead of copying the whole buffer every round (~60ms/round
+            # at 100×164k on CPU)
+            self._round_step = jax.jit(round_step, donate_argnums=(0, 1, 2))
             return
 
         rows_per_shard = self.rows_per_shard
 
-        def shard_body(global_f, g_cdf, g_max, buf, parts, pmask, xs, ys, ws,
-                       ims, lr, theta_d, theta_u):
+        def shard_body(global_f, g_cdf, g_max, buf, ef_buf, parts, pmask,
+                       xs, ys, ws, ims, lr, theta_d, theta_u):
             # global → shard-local buffer rows; padding (= n_clients) stays
             # out of range for every shard
             row0 = jax.lax.axis_index("data") * rows_per_shard
             parts_l = parts - row0
-            buf, up_sum, db, ub, gn = chunked_scan(
-                global_f, g_cdf, g_max, buf, parts_l, pmask, xs, ys, ws, ims,
-                lr, theta_d, theta_u)
+            buf, ef_buf, up_sum, db, ub, gn = chunked_scan(
+                global_f, g_cdf, g_max, buf, ef_buf, parts_l, pmask, xs, ys,
+                ws, ims, lr, theta_d, theta_u)
             up_sum = jax.lax.psum(up_sum, "data")
             cnt = jax.lax.psum(jnp.sum(pmask), "data")
             new_global = global_f - up_sum / jnp.maximum(cnt, 1.0)
-            return new_global, buf, db, ub, gn
+            return new_global, buf, ef_buf, db, ub, gn
 
         sharded = MESH.shard_map_compat(
             shard_body, self.mesh,
-            in_specs=(P(), P(), P(), P("data", None), P("data"), P("data"),
-                      P("data"), P("data"), P("data"), P("data"), P(),
-                      P("data"), P("data")),
-            out_specs=(P(), P("data", None), P("data"), P("data"),
-                       P("data")),
+            in_specs=(P(), P(), P(), P("data", None), P("data", None),
+                      P("data"), P("data"), P("data"), P("data"), P("data"),
+                      P("data"), P(), P("data"), P("data")),
+            out_specs=(P(), P("data", None), P("data", None), P("data"),
+                       P("data"), P("data")),
             axis_names={"data"})
 
-        def round_step_sharded(global_f, local_buf, parts, pmask, xs, ys, ws,
-                               ims, lr, theta_d, theta_u):
+        def round_step_sharded(global_f, local_buf, ef_buf, parts, pmask,
+                               xs, ys, ws, ims, lr, theta_d, theta_u):
             # one global-model histogram per round, replicated into shards
             g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
-            return sharded(global_f, g_cdf, g_max, local_buf, parts, pmask,
-                           xs, ys, ws, ims, lr, theta_d, theta_u)
+            return sharded(global_f, g_cdf, g_max, local_buf, ef_buf, parts,
+                           pmask, xs, ys, ws, ims, lr, theta_d, theta_u)
 
-        self._round_step = jax.jit(round_step_sharded, donate_argnums=(0, 1))
+        self._round_step = jax.jit(round_step_sharded,
+                                   donate_argnums=(0, 1, 2))
 
     # -- host-side chunk/shard marshalling ----------------------------------
     def _group(self, a: np.ndarray, order: np.ndarray, fill) -> np.ndarray:
         """Order by shard, pad each shard's group to p_pad, flatten."""
         d, ps, pp = self.n_dev, self.p_shard, self.p_pad
+        if d == 1 and pp == ps:
+            # identity order, no padding: skip the fancy-index copy (tens
+            # of MB per round for the batch tensors at dense cohorts)
+            return np.asarray(a)
         a = np.asarray(a)[order].reshape((d, ps) + np.asarray(a).shape[1:])
         if pp > ps:
             a = np.concatenate(
@@ -384,19 +452,29 @@ class RoundExecutor:
         return a.reshape((d * pp,) + a.shape[2:])
 
     def _ungroup(self, a, order: np.ndarray) -> np.ndarray:
-        """Drop padding, restore the caller's participant order."""
+        """Drop padding, restore the caller's participant order. Multi-host
+        "data"-sharded outputs are allgathered into every process first."""
         d, ps, pp = self.n_dev, self.p_shard, self.p_pad
-        a = np.asarray(a).reshape((d, pp) + np.asarray(a).shape[1:])
+        a = MESH.fetch_global(a)
+        a = a.reshape((d, pp) + a.shape[1:])
         a = a[:, :ps].reshape((d * ps,) + a.shape[2:])
         out = np.empty_like(a)
         out[order] = a
         return out
 
-    def step(self, global_f, local_buf, parts: np.ndarray, xs, ys, ws, ims,
-             lr, theta_d, theta_u):
-        """Run one round. Returns (global_f, local_buf, down_bits [P],
-        up_bits [P], gnorms [P]) with per-participant outputs as np arrays
-        in the caller's ``parts`` order."""
+    def _put(self, a: np.ndarray, spec):
+        """Device placement of one grouped host input. Single-process jit
+        handles the (re)sharding itself; a multi-process mesh needs the
+        global array assembled from each process's local rows."""
+        if self.mesh is None or jax.process_count() == 1:
+            return jnp.asarray(a)
+        return MESH.host_local_array(self.mesh, spec, a)
+
+    def step(self, global_f, local_buf, ef_buf, parts: np.ndarray, xs, ys,
+             ws, ims, lr, theta_d, theta_u):
+        """Run one round. Returns (global_f, local_buf, ef_buf,
+        down_bits [P], up_bits [P], gnorms [P]) with per-participant outputs
+        as np arrays in the caller's ``parts`` order."""
         owner = parts // self.rows_per_shard
         if self.n_dev > 1:
             counts = np.bincount(owner, minlength=self.n_dev)
@@ -405,15 +483,16 @@ class RoundExecutor:
                     "sharded mode needs stratified participants "
                     f"({self.p_shard} per shard; got {counts.tolist()})")
         order = np.argsort(owner, kind="stable")
-        g = lambda a, fill: jnp.asarray(self._group(a, order, fill))
-        new_global, new_buf, db, ub, gn = self._round_step(
-            global_f, local_buf,
+        g = lambda a, fill: self._put(self._group(a, order, fill),
+                                      P("data"))
+        new_global, new_buf, new_ef, db, ub, gn = self._round_step(
+            global_f, local_buf, ef_buf,
             g(parts.astype(np.int32), np.int32(self.n_clients)),
             g(np.ones(len(parts), np.float32), np.float32(0.0)),
             g(xs, xs.dtype.type(0)), g(ys, ys.dtype.type(0)),
             g(ws, np.float32(0.0)), g(ims, np.float32(0.0)), lr,
             g(theta_d, np.float32(0.0)), g(theta_u, np.float32(0.0)))
-        return (new_global, new_buf, self._ungroup(db, order),
+        return (new_global, new_buf, new_ef, self._ungroup(db, order),
                 self._ungroup(ub, order), self._ungroup(gn, order))
 
 
@@ -424,7 +503,20 @@ class RoundExecutor:
 class Simulator:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
+        if cfg.multi_host and not cfg.sharded:
+            raise ValueError("multi_host=True requires sharded=True (the "
+                             "multi-host mesh is the sharded 'data' axis)")
+        if cfg.multi_host:
+            # MUST precede every jax call in this process (backend resolve,
+            # param init): jax.distributed.initialize refuses to run after
+            # the backends are up. Single-process (no cluster) falls back
+            # cleanly, but say so — N processes silently simulating in
+            # isolation would look like a successful multi-host run.
+            if not MESH.init_distributed():
+                warnings.warn(
+                    "multi_host=True but no multi-process jax runtime was "
+                    "detected (or jax was already initialized); running "
+                    "single-process on the local devices", stacklevel=2)
         self.backend = C.resolve_backend(cfg.backend)
         ds_fn = synthetic.DATASETS[cfg.dataset]
         self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
@@ -470,7 +562,8 @@ class Simulator:
         self.executor = RoundExecutor(
             cfg, self.apply_fn, self.spec, self.backend,
             quantize=bool(getattr(self.policy, "quantize", False)),
-            n_part=self.n_part, mesh=self.mesh)
+            n_part=self.n_part, mesh=self.mesh,
+            use_ef=cfg.caesar.use_error_feedback)
 
         def evaluate(flat_params, x, y):
             logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
@@ -498,103 +591,204 @@ class Simulator:
         return BL.POLICIES[name]()
 
     # ------------------------------------------------------------------
-    def _select_participants(self) -> np.ndarray:
+    # Host-side producer work (participant draw + batch gather). Every
+    # round owns a SeedSequence-derived RNG stream, so the pipelined and
+    # synchronous drivers consume identical randomness — a shared generator
+    # cannot be read out of lockstep from a worker thread.
+    # ------------------------------------------------------------------
+
+    def _round_rng(self, t: int) -> np.random.Generator:
+        """Deterministic per-round stream: SeedSequence(seed, (2, t)).
+        Spawn-key kinds 0/1 belong to CapabilityModel's per-epoch/per-round
+        streams; 2 is the round's sampling stream."""
+        return np.random.default_rng(
+            np.random.SeedSequence(self.cfg.seed, spawn_key=(2, t)))
+
+    def _select_participants(self, rng: np.random.Generator) -> np.ndarray:
         """Uniform draw; stratified per shard in sharded mode (each device
         must own its participants' buffer rows). With one device the two
         are the same draw."""
         n, d = self.cfg.n_clients, self.n_dev
         if d <= 1:
-            return self.rng.choice(n, self.n_part, replace=False)
+            return rng.choice(n, self.n_part, replace=False)
         rows, ps = n // d, self.n_part // d
         return np.concatenate([
-            self.rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
-                            replace=False)
+            rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
+                       replace=False)
             for s in range(d)])
 
-    def _sample_batches(self, clients, batch_sizes, taus, b_cap, tau_cap):
-        """numpy gather → [P, τ_cap, b_cap, ...] padded arrays + masks."""
-        xs, ys, ws, ims = [], [], [], []
+    def _prefetch_round(self, t: int, out=None):
+        """All of round t's host sampling: (participants, xs, ys).
+
+        Pure numpy on data that is read-only after __init__, so it is safe
+        to run on the pipeline worker thread while the device executes
+        round t−1. The batch *indices* need only the caps (b_max, τ) — the
+        plan-dependent per-participant (batch, τ_i) enter later as masks
+        (`_batch_masks`), which is what makes sampling plan-independent and
+        prefetchable.
+
+        ``out`` is an optional (xs, ys) pair of preallocated cap-shaped
+        arrays filled IN PLACE — the pipelined driver flips two persistent
+        buffer sets (true double-buffering) so the worker never
+        mmaps/munmaps tens of MB mid-step, which would stall the XLA
+        threads with TLB shootdowns."""
+        rng = self._round_rng(t)
+        parts = self._select_participants(rng)
+        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
         xtr, ytr = self.data.x_train, self.data.y_train
-        for ci, b, tau in zip(clients, batch_sizes, taus):
-            shard = self.splits[ci]
-            idx = self.rng.choice(shard, size=(tau_cap, b_cap), replace=True)
-            x = xtr[idx]
-            y = ytr[idx]
-            w = np.zeros((tau_cap, b_cap), np.float32)
-            w[:, :int(b)] = 1.0
-            im = (np.arange(tau_cap) < tau).astype(np.float32)
-            xs.append(x); ys.append(y); ws.append(w); ims.append(im)
-        return (np.stack(xs), np.stack(ys),
-                np.stack(ws).astype(np.float32),
-                np.stack(ims).astype(np.float32))
+        idx = np.empty((len(parts), tau_cap, b_cap), np.intp)
+        for i, ci in enumerate(parts):
+            idx[i] = rng.choice(self.splits[ci], size=(tau_cap, b_cap),
+                                replace=True)
+        if out is None:
+            out = self._alloc_batch_buffers(len(parts))
+        xs, ys = out
+        flat = idx.reshape(-1)
+        np.take(xtr, flat, axis=0, out=xs.reshape((-1,) + xtr.shape[1:]))
+        np.take(ytr, flat, axis=0, out=ys.reshape((-1,) + ytr.shape[1:]))
+        return parts, xs, ys
+
+    def _alloc_batch_buffers(self, n_parts: int):
+        """One cap-shaped (xs, ys) buffer set for `_prefetch_round`."""
+        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
+        xtr, ytr = self.data.x_train, self.data.y_train
+        return (np.empty((n_parts, tau_cap, b_cap) + xtr.shape[1:],
+                         xtr.dtype),
+                np.empty((n_parts, tau_cap, b_cap) + ytr.shape[1:],
+                         ytr.dtype))
+
+    @staticmethod
+    def _batch_masks(batch_sizes, taus, b_cap, tau_cap):
+        """Per-participant (sample-weight [P,τ,b], iter-mask [P,τ]) masks
+        realizing the planned batch sizes / local-iteration counts on the
+        prefetched cap-shaped batches."""
+        p = len(batch_sizes)
+        ws = np.zeros((p, tau_cap, b_cap), np.float32)
+        for i, b in enumerate(batch_sizes):
+            ws[i, :, :int(b)] = 1.0
+        ims = (np.arange(tau_cap)[None, :]
+               < np.asarray(taus)[:, None]).astype(np.float32)
+        return ws, ims
+
+    def _init_buffers(self):
+        """Fresh (global, local, EF) device buffers — the step donates its
+        inputs, so `flat0` itself must stay intact."""
+        n = self.cfg.n_clients
+        flat0 = np.asarray(self.flat0)
+        ef_w = self.executor.ef_width
+        if self.mesh is None:
+            return (jnp.array(self.flat0, copy=True),
+                    jnp.tile(self.flat0[None, :], (n, 1)),
+                    jnp.zeros((n, ef_w), jnp.float32))
+        # broadcast_to views: multi-host processes materialize only their
+        # own buffer rows (launch.mesh.host_local_array)
+        return (MESH.host_local_array(self.mesh, P(), flat0.copy()),
+                MESH.host_local_array(self.mesh, P("data", None),
+                                      np.broadcast_to(flat0[None, :],
+                                                      (n, flat0.size))),
+                MESH.host_local_array(self.mesh, P("data", None),
+                                      np.zeros((n, ef_w), np.float32)))
 
     # ------------------------------------------------------------------
     def run(self, log: Callable[[str], None] = lambda s: None) -> History:
         cfg = self.cfg
         ccfg = cfg.caesar
-        n, b_max, tau = cfg.n_clients, ccfg.b_max, ccfg.tau
+        b_max, tau = ccfg.b_max, ccfg.tau
+        q_bits = float(self.model_bits)
         hist = History()
-        # fresh copies: the step donates its inputs, flat0 must stay intact
-        global_f = jnp.array(self.flat0, copy=True)
-        # every client starts from w0 (never-participated ⇒ full-precision DL)
-        local_buf = jnp.tile(self.flat0[None, :], (n, 1))
-        if self.mesh is not None:
-            global_f = jax.device_put(global_f,
-                                      NamedSharding(self.mesh, P()))
-            local_buf = jax.device_put(local_buf,
-                                       NamedSharding(self.mesh,
-                                                     P("data", None)))
+        global_f, local_buf, ef_buf = self._init_buffers()
         cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
+        # double-buffered sampling: one worker prefetches round t+1's
+        # participants + batches (pure numpy) into the OFF buffer set while
+        # the device runs round t from the other — two persistent sets,
+        # filled in place, so steady state allocates nothing
+        pool = (ThreadPoolExecutor(max_workers=1) if cfg.pipelined
+                else None)
+        n_bufs = 2 if pool else 1
+        bufs = [None] * n_bufs
 
-        for t in range(1, cfg.rounds + 1):
-            wall0 = time.perf_counter()
-            parts = self._select_participants()
-            mu, bw_d, bw_u = self.cap.snapshot(t)
-            lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
+        def prefetch(t):
+            slot = t % n_bufs
+            if bufs[slot] is None:
+                bufs[slot] = self._alloc_batch_buffers(self.n_part)
+            return self._prefetch_round(t, out=bufs[slot])
 
-            theta_d, theta_u, batch, taus = self.planner.plan(
-                t, parts, mu, bw_d, bw_u)
-            xs, ys, ws, ims = self._sample_batches(parts, batch, taus,
-                                                   b_max, tau)
-            global_f, local_buf, down_bits, up_bits, gnorms = \
-                self.executor.step(global_f, local_buf, parts, xs, ys, ws,
-                                   ims, lr,
-                                   np.asarray(theta_d, np.float32),
-                                   np.asarray(theta_u, np.float32))
-            self.planner.observe(t, parts, gnorms)
+        try:
+            pending = pool.submit(prefetch, 1) if pool else None
+            for t in range(1, cfg.rounds + 1):
+                wall0 = time.perf_counter()
+                if pool:
+                    parts, xs, ys = pending.result()
+                    if t < cfg.rounds:
+                        pending = pool.submit(prefetch, t + 1)
+                else:
+                    parts, xs, ys = prefetch(t)
+                mu, bw_d, bw_u = self.cap.snapshot(t)
+                lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
 
-            # --- accounting (Eq. 7) ---
-            down_b = np.asarray(down_bits, np.float64)
-            up_b = np.asarray(up_bits, np.float64)
-            times = (down_b / bw_d[parts] + up_b / bw_u[parts]
-                     + taus * batch * mu[parts])
-            cum_time += float(times.max())
-            cum_bits += float(down_b.sum() + up_b.sum())
-            waiting = float(np.mean(times.max() - times))
-            waiting_sum += waiting
-            hist.waiting_per_round.append(waiting)
-            # the np.asarray conversions above synced on the step outputs, so
-            # this is an honest per-round host wall-clock
-            hist.wall_per_round.append(time.perf_counter() - wall0)
+                theta_d, theta_u, batch, taus = self.planner.plan(
+                    t, parts, mu, bw_d, bw_u)
+                ws, ims = self._batch_masks(batch, taus, b_max, tau)
+                global_f, local_buf, ef_buf, down_bits, up_bits, gnorms = \
+                    self.executor.step(global_f, local_buf, ef_buf, parts,
+                                       xs, ys, ws, ims, lr,
+                                       np.asarray(theta_d, np.float32),
+                                       np.asarray(theta_u, np.float32))
+                self.planner.observe(t, parts, gnorms)
 
-            if t % cfg.eval_every == 0 or t == cfg.rounds:
-                ne = min(cfg.eval_samples, len(self.data.y_test))
-                acc = float(self._eval(global_f,
-                                       jnp.asarray(self.data.x_test[:ne]),
-                                       jnp.asarray(self.data.y_test[:ne])))
-                hist.rounds.append(t)
-                hist.sim_time.append(cum_time)
-                hist.traffic_bits.append(cum_bits)
-                hist.accuracy.append(acc)
-                hist.waiting.append(waiting_sum / t)
-                hist.wall.append(float(np.mean(hist.wall_per_round)))
-                log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} acc={acc:.4f} "
-                    f"time={cum_time:,.0f}s traffic={cum_bits/8e9:.3f}GB "
-                    f"wait={waiting_sum / t:.1f}s")
-                if (cfg.target_accuracy is not None
-                        and acc >= cfg.target_accuracy):
-                    break
+                # --- accounting ---
+                # traffic: actual hybrid/top-k payload bits on the wire
+                down_b = np.asarray(down_bits, np.float64)
+                up_b = np.asarray(up_bits, np.float64)
+                cum_bits += float(down_b.sum() + up_b.sum())
+                # time + barrier waiting: the Eq.-7 θ·Q/β model — the SAME
+                # model optimize_batch_sizes equalizes (core/batchsize.py),
+                # so the planned equalization is visible in the measured
+                # idle-wait (the Eq.-8 leader sets the round max, no
+                # phantom barrier from a second time model)
+                times = np.asarray(BS.round_times(
+                    np.asarray(theta_d, np.float64),
+                    np.asarray(theta_u, np.float64), q_bits,
+                    bw_d[parts], bw_u[parts],
+                    np.asarray(taus, np.float64),
+                    np.asarray(batch, np.float64), mu[parts]))
+                cum_time += float(times.max())
+                waiting = float(np.mean(times.max() - times))
+                waiting_sum += waiting
+                hist.waiting_per_round.append(waiting)
+                # the np.asarray conversions above synced on the step
+                # outputs, so this is an honest per-round host wall-clock
+                hist.wall_per_round.append(time.perf_counter() - wall0)
+                if t == 1:
+                    hist.compile_s = hist.wall_per_round[0]
+
+                if t % cfg.eval_every == 0 or t == cfg.rounds:
+                    ne = min(cfg.eval_samples, len(self.data.y_test))
+                    acc = float(self._eval(global_f,
+                                           jnp.asarray(self.data.x_test[:ne]),
+                                           jnp.asarray(self.data.y_test[:ne])))
+                    hist.rounds.append(t)
+                    hist.sim_time.append(cum_time)
+                    hist.traffic_bits.append(cum_bits)
+                    hist.accuracy.append(acc)
+                    hist.waiting.append(waiting_sum / t)
+                    # warm mean: round 1 carries the jit compile
+                    # (hist.compile_s); until a warm sample exists, fall
+                    # back to the cold one
+                    warm = hist.wall_per_round[1:] or hist.wall_per_round
+                    hist.wall.append(float(np.mean(warm)))
+                    log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} "
+                        f"acc={acc:.4f} time={cum_time:,.0f}s "
+                        f"traffic={cum_bits/8e9:.3f}GB "
+                        f"wait={waiting_sum / t:.1f}s")
+                    if (cfg.target_accuracy is not None
+                            and acc >= cfg.target_accuracy):
+                        break
+        finally:
+            if pool:
+                pool.shutdown(wait=False, cancel_futures=True)
         self.global_flat = global_f          # expose final flat model
+        self.ef_flat = ef_buf                # [n, n_params] residuals (EF on)
         return hist
 
     # ------------------------------------------------------------------

@@ -45,6 +45,27 @@ class TestCapability:
         _, bd, bu = cap.snapshot(3)
         assert bd.min() >= 1e6 and bd.max() <= 30e6
 
+    def test_seed_streams_do_not_collide(self):
+        """SeedSequence spawn keys replace the arithmetic seeds
+        (seed*100003 + epoch / seed*7919 + t), under which e.g. seed=0
+        collapsed every mode epoch onto nearly the same stream and
+        (seed, t) pairs collided across seeds (seed=1 at t equaled seed=0
+        at 7919 + t)."""
+        a = CapabilityModel(16, seed=0)
+        b = CapabilityModel(16, seed=1)
+        # seed=0 must still re-draw modes across epochs
+        mode0 = a.snapshot(1)[0] / a._tier
+        mode1 = a.snapshot(21)[0] / a._tier
+        assert not np.allclose(mode0, mode1)
+        # the old collision pair: seed*7919 + t is equal for
+        # (seed=0, t=7919) and (seed=1, t=0) — raw draws must now differ
+        _, bd_a, _ = a.snapshot(7919)
+        _, bd_b, _ = b.snapshot(0)
+        assert not np.allclose(bd_a / a._bw_tier, bd_b / b._bw_tier)
+        # deterministic: same (seed, t) ⇒ same snapshot
+        np.testing.assert_array_equal(
+            a.snapshot(5)[1], CapabilityModel(16, seed=0).snapshot(5)[1])
+
 
 def _cfg(**kw):
     base = dict(dataset="har", rounds=8, n_clients=24, data_scale=0.25,
@@ -96,9 +117,11 @@ class TestSimulator:
         assert hit is not None and hit[2] >= 1
 
     def test_waiting_history_is_round_aligned_running_mean(self):
-        """History.waiting/wall are eval-aligned RUNNING MEANS over every
-        simulated round (not a 1-in-eval_every subsample); the raw per-round
-        samples live in waiting_per_round/wall_per_round."""
+        """History.waiting is an eval-aligned RUNNING MEAN over every
+        simulated round (not a 1-in-eval_every subsample); History.wall is
+        the WARM running mean (round 1 carries the one-time jit compile —
+        excluded and reported as compile_s); the raw per-round samples live
+        in waiting_per_round/wall_per_round."""
         h = Simulator(_cfg(rounds=8, eval_every=4)).run()
         assert len(h.waiting) == len(h.rounds) == len(h.wall) == 2
         assert len(h.waiting_per_round) == len(h.wall_per_round) == 8
@@ -106,7 +129,61 @@ class TestSimulator:
             np.testing.assert_allclose(
                 h.waiting[i], np.mean(h.waiting_per_round[:t]), rtol=1e-9)
             np.testing.assert_allclose(
-                h.wall[i], np.mean(h.wall_per_round[:t]), rtol=1e-9)
+                h.wall[i], np.mean(h.wall_per_round[1:t]), rtol=1e-9)
+        assert h.compile_s == h.wall_per_round[0]
+        # the compile round is typically an order of magnitude above the
+        # warm mean — it must not be folded into the reported wall
+        assert h.wall[-1] <= np.mean(h.wall_per_round)
+
+    def test_eq7_time_model_consistent_with_planner(self):
+        """Accounting regression: measured round time / barrier waiting use
+        the SAME Eq.-7 θ·Q/β model the Eq. 8–9 planner equalizes — the
+        Eq.-8 leader (fastest participant, runs at b_max) must attain the
+        round's max time, i.e. no phantom barrier from a second,
+        payload-bits-based time model."""
+        from repro.core import batchsize as bs
+        cfg = _cfg(rounds=6)
+        sim = Simulator(cfg)
+        rec = []
+        orig_plan = sim.planner.plan
+
+        def spy(t, parts, mu, bw_d, bw_u):
+            out = orig_plan(t, parts, mu, bw_d, bw_u)
+            rec.append((t, parts, mu, bw_d, bw_u, out))
+            return out
+        sim.planner.plan = spy
+        h = sim.run()
+        q = float(sim.model_bits)
+        tau = cfg.caesar.tau
+        for i, (t, parts, mu, bw_d, bw_u, out) in enumerate(rec):
+            theta_d, theta_u, batch, taus = out
+            times = np.asarray(bs.round_times(
+                np.asarray(theta_d, np.float32),
+                np.asarray(theta_u, np.float32), q,
+                np.asarray(bw_d[parts], np.float32),
+                np.asarray(bw_u[parts], np.float32), tau,
+                np.asarray(batch, np.float32),
+                np.asarray(mu[parts], np.float32)))
+            # the planner gave b_max to the fastest participant; that
+            # leader's planned time is the barrier for every participant
+            # the Eq.-9 equalization is FEASIBLE for. Participants whose
+            # communication alone exceeds the leader's time are pinned at
+            # b_min (they cannot run fewer than b_min samples) — those are
+            # genuine stragglers, not a phantom barrier; nobody else may
+            # exceed the leader.
+            leaders = np.flatnonzero(batch == cfg.caesar.b_max)
+            assert leaders.size >= 1
+            t_lead = times[leaders].max()
+            over = times > t_lead * (1 + 1e-5)
+            assert np.all(batch[over] == cfg.caesar.b_min), \
+                f"round {t}: unclipped participant above the Eq.-8 leader"
+            equalizable = batch > cfg.caesar.b_min
+            np.testing.assert_allclose(times[equalizable].max(), t_lead,
+                                       rtol=1e-5)
+            # and the measured metric agrees with the Eq.-7 model
+            np.testing.assert_allclose(
+                h.waiting_per_round[i], np.mean(times.max() - times),
+                rtol=1e-4)
 
 
 class TestSyntheticData:

@@ -50,6 +50,63 @@ class TestChunkLayout:
         assert C.chunk_layout(3, 64) == (3, 3, 1)
 
 
+class TestAutoChunk:
+    """auto_chunk picks the largest chunk whose ~4 f32 [chunk, n_params]
+    round intermediates fit the budget, floored at MIN_AUTO_CHUNK and
+    capped at the cohort."""
+
+    def test_budget_binds_below_cache_target(self):
+        # 32 MB budget / (4 arrays · 4 B · 164_000) = 12 participants
+        n_params, budget = 164_000, 32.0
+        expect = int(budget * 2 ** 20 // (C.ROUND_WORKSET_ARRAYS * 4
+                                          * n_params))
+        assert expect == 12
+        assert C.auto_chunk(n_params, 2000, budget) == expect
+
+    def test_cache_target_binds_above(self):
+        # a lavish RSS budget must NOT buy a cache-hostile chunk: measured
+        # at 164k params, a budget-only chunk of ~200 runs 2× slower than
+        # the L3-resident ~25 (DESIGN.md §7)
+        n_params = 164_000
+        expect = int(C.CACHE_TARGET_MB * 2 ** 20
+                     // (C.ROUND_WORKSET_ARRAYS * 4 * n_params))
+        assert C.auto_chunk(n_params, 2000, 4096.0) == expect
+        assert expect == 25
+
+    def test_small_model_takes_whole_cohort(self):
+        assert C.auto_chunk(10_000, 50, 1024.0) == 50
+
+    def test_huge_model_floors_at_min_chunk(self):
+        assert C.auto_chunk(500_000_000, 64, 1024.0) == C.MIN_AUTO_CHUNK
+
+    def test_cohort_below_floor(self):
+        # floor is min(MIN_AUTO_CHUNK, n_items): a 4-participant cohort
+        # under a hopeless budget still chunks by 4, never 0
+        assert C.auto_chunk(10 ** 9, 4, 1.0) == 4
+
+    def test_monotone_in_budget(self):
+        chunks = [C.auto_chunk(50_000, 10 ** 6, b)
+                  for b in (16.0, 32.0, 64.0, 128.0)]
+        assert chunks == sorted(chunks)
+
+    def test_invalid_args_raise(self):
+        with pytest.raises(ValueError):
+            C.auto_chunk(0, 10)
+        with pytest.raises(ValueError):
+            C.auto_chunk(10, 0)
+
+    def test_executor_consults_auto_chunk(self):
+        """SimConfig.chunk_size=None resolves through auto_chunk against
+        chunk_budget_mb; chunk_size=0 forces the single-chunk engine."""
+        sim = Simulator(_cfg(participation=0.5, chunk_budget_mb=26.0))
+        assert sim.executor.chunk == C.auto_chunk(sim.n_params, sim.n_part,
+                                                  26.0)
+        assert 1 < sim.executor.chunk < sim.n_part
+        sim0 = Simulator(_cfg(participation=0.5, chunk_size=0))
+        assert sim0.executor.chunk == sim0.n_part
+        assert sim0.executor.n_chunks == 1
+
+
 class TestChunkedParity:
     def test_chunked_matches_unchunked_same_seed(self):
         """chunk_size must not change the trajectory: same participants,
@@ -87,11 +144,101 @@ class TestChunkedParity:
         assert np.isfinite(h.accuracy[-1])
 
 
+class TestPipelinedParity:
+    """The double-buffered driver must be a pure latency optimization:
+    every round draws from its own SeedSequence stream, so the pipelined
+    and synchronous loops consume identical randomness and produce
+    bit-identical trajectories."""
+
+    def test_pipelined_matches_synchronous_same_seed(self):
+        h_pipe = _traj()                         # pipelined=True default
+        h_sync = _traj(pipelined=False)
+        assert h_pipe.accuracy == h_sync.accuracy
+        assert h_pipe.traffic_bits == h_sync.traffic_bits
+        assert h_pipe.waiting_per_round == h_sync.waiting_per_round
+
+    def test_pipelined_matches_synchronous_chunked_baseline(self):
+        h_pipe = _traj(scheme="prowd", rounds=4, chunk_size=2)
+        h_sync = _traj(scheme="prowd", rounds=4, chunk_size=2,
+                       pipelined=False)
+        assert h_pipe.accuracy == h_sync.accuracy
+        assert h_pipe.traffic_bits == h_sync.traffic_bits
+
+    def test_auto_chunk_matches_explicit_same_seed(self):
+        """auto_chunk is a memory knob, not a semantics knob: forcing a
+        sub-cohort auto chunk must reproduce the explicit-chunk (and the
+        single-chunk) trajectory."""
+        kw = dict(participation=0.5, rounds=4)
+        sim = Simulator(_cfg(chunk_budget_mb=26.0, **kw))
+        auto = sim.executor.chunk
+        assert 1 < auto < sim.n_part       # genuinely sub-cohort
+        h_auto = sim.run()
+        h_expl = _traj(chunk_size=auto, **kw)
+        assert h_auto.accuracy == h_expl.accuracy
+        assert h_auto.traffic_bits == h_expl.traffic_bits
+        h_one = _traj(chunk_size=0, **kw)
+        np.testing.assert_allclose(h_auto.accuracy, h_one.accuracy,
+                                   atol=5e-3)
+        np.testing.assert_allclose(h_auto.traffic_bits, h_one.traffic_bits,
+                                   rtol=1e-6)
+
+
+class TestErrorFeedback:
+    """CaesarConfig.use_error_feedback must not be a silent no-op: the
+    Track-A executor carries an EF residual buffer whose rows accumulate
+    what upload compression dropped and re-inject it on the client's next
+    participation."""
+
+    _ck = dict(tau=3, b_max=8, theta_u_min=0.55, theta_u_max=0.6)
+
+    def test_residuals_accumulate_and_change_trajectory(self):
+        sim_ef = Simulator(_cfg(caesar=CaesarConfig(use_error_feedback=True,
+                                                    **self._ck)))
+        assert sim_ef.executor.use_ef
+        assert sim_ef.executor.ef_width == sim_ef.n_params
+        h_ef = sim_ef.run()
+        ef = np.asarray(sim_ef.ef_flat)
+        assert (np.abs(ef).sum(axis=1) > 0).any()
+        sim_no = Simulator(_cfg(caesar=CaesarConfig(**self._ck)))
+        assert sim_no.executor.ef_width == 0     # zero-width row when off
+        h_no = sim_no.run()
+        assert np.isfinite(h_ef.accuracy[-1])
+        assert np.abs(np.asarray(sim_ef.global_flat)
+                      - np.asarray(sim_no.global_flat)).max() > 0
+        # EF changes the model, not the traffic model's honesty
+        assert h_ef.traffic_bits[-1] > 0 and h_no.traffic_bits[-1] > 0
+
+    def test_ef_rides_the_chunked_scan(self):
+        h = Simulator(_cfg(chunk_size=2, caesar=CaesarConfig(
+            use_error_feedback=True, **self._ck))).run()
+        assert np.isfinite(h.accuracy[-1])
+
+
+class TestMultiHost:
+    def test_multi_host_requires_sharded(self):
+        with pytest.raises(ValueError):
+            Simulator(_cfg(multi_host=True))
+
+    def test_mesh_helpers_degenerate_single_process(self):
+        """Single-process: init_distributed reports no cluster,
+        host_local_array is a device_put, fetch_global a plain asarray —
+        the multi-host round path reduces to the local one."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch import mesh as MESH
+        assert MESH.init_distributed() is False
+        m = MESH.make_data_mesh()
+        arr = np.arange(12, dtype=np.float32).reshape(
+            m.shape["data"] * (12 // m.shape["data"]), -1)
+        g = MESH.host_local_array(m, P("data"), arr)
+        np.testing.assert_array_equal(MESH.fetch_global(g), arr)
+
+
 class TestExecutorMarshalling:
     def test_group_ungroup_roundtrip(self):
         sim = Simulator(_cfg(chunk_size=4))
         ex = sim.executor
-        parts = sim._select_participants()
+        parts = sim._select_participants(sim._round_rng(1))
         order = np.argsort(parts // ex.rows_per_shard, kind="stable")
         vals = np.arange(len(parts), dtype=np.float32) * 1.5
         grouped = ex._group(vals, order, np.float32(-1.0))
@@ -118,11 +265,13 @@ _SUBPROC = textwrap.dedent("""
     from repro.core.caesar import CaesarConfig
     from repro.fl.simulation import SimConfig, Simulator
 
+    # multi_host=True exercises init_distributed's single-process fallback
+    # + the host_local_array/fetch_global marshalling on a real 4-shard mesh
     cfg = SimConfig(dataset="har", rounds=4, n_clients=24, data_scale=0.25,
                     eval_every=2, participation=1/3, seed=3,
                     dataset_kwargs={"sep": 1.8, "noise": 2.0},
                     caesar=CaesarConfig(tau=3, b_max=8),
-                    chunk_size=2, sharded=True)
+                    chunk_size=2, sharded=True, multi_host=True)
     sim = Simulator(cfg)
     assert sim.n_dev == 4, sim.n_dev
     assert sim.executor.p_shard == 2
