@@ -18,8 +18,16 @@ History.compile_s) via the warmup drop in `_median_steady`.
 The default uses τ=1 local steps so the measurement isolates the round
 *engine* (the local-SGD math is line-for-line identical in both engines and
 would otherwise dominate the ratio); a τ=5 training-heavy config is recorded
-alongside. Emits BENCH_round.json at the repo root and under
-experiments/bench/.
+alongside.
+
+The **ragged-vs-masked** section (DESIGN.md §8) measures the plan-shaped
+tier engine against the uniform-cap masked engine at τ=5 — the
+training-bound regime where masked padding wastes the most FLOPs — on the
+heterogeneous capability draw (participant-scoped Eq. 8–9 planning, the
+production default), at the 100-client HAR point and the dense
+1000-client/P=500 point, with same-seed trajectory parity and tier
+occupancy / jit-cache telemetry. Emits BENCH_round.json at the repo root
+and under experiments/bench/.
 """
 from __future__ import annotations
 
@@ -46,11 +54,14 @@ def bench_config(tau: int, n_clients: int, rounds: int,
                  pipelined: bool = True) -> SimConfig:
     # plan_scope="all" pins the PLANNING layer to what LegacyEngine below
     # computes (plan_round without a participant mask), so the seed-vs-fused
-    # comparison isolates the execution engine — not the PR-2 planner fix
+    # comparison isolates the execution engine — not the PR-2 planner fix.
+    # ragged=False: the legacy engine runs at the [τ, b_max] cap, so the
+    # masked engine is its like-for-like counterpart; the ragged engine is
+    # measured separately (bench_ragged) against the masked one.
     return SimConfig(dataset="har", scheme="caesar", n_clients=n_clients,
                      participation=0.1, rounds=rounds, data_scale=0.25,
                      eval_every=10 ** 6,   # final-round eval only
-                     pipelined=pipelined,
+                     pipelined=pipelined, ragged=False,
                      caesar=CaesarConfig(tau=tau, b_max=16,
                                          plan_scope="all"))
 
@@ -253,6 +264,72 @@ def bench_engines(tau: int, n_clients: int, rounds: int) -> dict:
     }
 
 
+def bench_ragged(tau: int, n_clients: int, rounds: int,
+                 participation: float = 0.1,
+                 data_scale: float = 0.25) -> dict:
+    """Plan-shaped ragged engine vs the uniform-cap masked engine, same
+    seed, on the heterogeneous capability draw (participant-scoped Eq. 8–9
+    planning — the production default, NOT the legacy plan_scope="all" of
+    `bench_config`: the ragged win is a property of the plan's b-spread)."""
+    def cfg(ragged):
+        return SimConfig(dataset="har", scheme="caesar",
+                         n_clients=n_clients, participation=participation,
+                         rounds=rounds, data_scale=data_scale,
+                         eval_every=10 ** 6, ragged=ragged,
+                         caesar=CaesarConfig(tau=tau, b_max=16))
+
+    # cold run (trajectory + lazy tier-shape compiles), then a same-seed
+    # replay against the warm jit caches: the ragged engine compiles each
+    # tier shape the first round that occupies it, so cold mid-run walls
+    # fold compiles in — the warm replay is the steady state. The masked
+    # engine gets the identical protocol (its single compile already falls
+    # in the dropped round 1, so warm ≈ cold there).
+    sim_r = Simulator(cfg(True))
+    t0 = time.perf_counter()
+    h_r = sim_r.run()
+    ragged_cold_e2e = time.perf_counter() - t0
+    tel = sim_r.executor.telemetry()
+    sim_r.reset()
+    t0 = time.perf_counter()
+    h_rw = sim_r.run()
+    ragged_e2e = time.perf_counter() - t0
+    assert h_rw.accuracy == h_r.accuracy     # replay really is same-seed
+    sim_m = Simulator(cfg(False))
+    h_m = sim_m.run()
+    sim_m.reset()
+    t0 = time.perf_counter()
+    h_mw = sim_m.run()
+    masked_e2e = time.perf_counter() - t0
+    ragged_ms = _median_steady(h_rw.wall_per_round) * 1e3
+    masked_ms = _median_steady(h_mw.wall_per_round) * 1e3
+    return {
+        "tau": tau, "n_clients": n_clients,
+        "participants": sim_r.n_part, "rounds": rounds,
+        "n_params": sim_r.n_params, "chunk": sim_r.executor.chunk,
+        "masked_round_ms": masked_ms,
+        "ragged_round_ms": ragged_ms,
+        "speedup": masked_ms / ragged_ms,
+        "masked_e2e_s": masked_e2e,
+        "ragged_e2e_s": ragged_e2e,
+        "ragged_cold_e2e_s": ragged_cold_e2e,   # includes tier-shape compiles
+        "compile_s": h_r.compile_s,
+        "work_fraction": tel["work_fraction"],
+        "tier_occupancy": tel["tier_occupancy"],
+        "compiled_tier_shapes": tel["compiled_tier_shapes"],
+        "shape_lattice_bound": tel["shape_lattice_bound"],
+        # parity: same plan ⇒ identical simulated time; trajectories agree
+        # to float-reduction noise (reduction order over the padded batch)
+        "ragged_final_acc": h_r.accuracy[-1],
+        "masked_final_acc": h_m.accuracy[-1],
+        "acc_equal": h_r.accuracy == h_m.accuracy,
+        "max_acc_diff": max(abs(a - b) for a, b in
+                            zip(h_r.accuracy, h_m.accuracy)),
+        "traffic_rel_diff": abs(h_r.traffic_bits[-1] - h_m.traffic_bits[-1])
+        / max(h_m.traffic_bits[-1], 1e-12),
+        "sim_time_equal": h_r.sim_time == h_m.sim_time,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -289,6 +366,34 @@ def main():
         results["round_engine_tau5"] = heavy
         print(f"bench_round/engine_tau5,{heavy['fused_round_ms'] * 1e3:.0f},"
               f"speedup={heavy['speedup']:.2f}x")
+
+    # plan-shaped ragged vs uniform-cap masked (DESIGN.md §8): τ=5 is the
+    # training-bound regime where the masked padding waste peaks
+    rag = bench_ragged(tau=1 if args.smoke else 5, n_clients=clients,
+                       rounds=rounds)
+    results["ragged_tau5" if not args.smoke else "ragged_smoke"] = rag
+    print(f"bench_round/ragged_tau{rag['tau']},"
+          f"{rag['ragged_round_ms'] * 1e3:.0f},"
+          f"speedup={rag['speedup']:.2f}x "
+          f"(masked {rag['masked_round_ms']:.0f}ms → ragged "
+          f"{rag['ragged_round_ms']:.0f}ms; work_fraction="
+          f"{rag['work_fraction']:.2f}; max_acc_diff="
+          f"{rag['max_acc_diff']:.1e}; shapes="
+          f"{rag['compiled_tier_shapes']}/{rag['shape_lattice_bound']})")
+
+    if not args.smoke:
+        # the dense 1000-client/P=500 cohort: the compute-bound point where
+        # the ROADMAP demands the hot path scale — fewer rounds (a dense
+        # masked τ=5 round is ~1 min on the CPU container)
+        dense = bench_ragged(tau=5, n_clients=1000, rounds=4,
+                             participation=0.5, data_scale=1.0)
+        results["ragged_dense_tau5"] = dense
+        print(f"bench_round/ragged_dense_tau5,"
+              f"{dense['ragged_round_ms'] * 1e3:.0f},"
+              f"speedup={dense['speedup']:.2f}x "
+              f"(masked {dense['masked_round_ms']:.0f}ms → ragged "
+              f"{dense['ragged_round_ms']:.0f}ms; work_fraction="
+              f"{dense['work_fraction']:.2f})")
 
     thr = bench_threshold(primary["n_params"], reps)
     results["threshold_selection"] = thr

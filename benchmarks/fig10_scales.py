@@ -5,14 +5,19 @@ Two studies live here:
 * ``run()`` — the paper-figure reproduction (30/60/100 clients, CPU budget),
   unchanged CSV/JSON conventions.
 * the **round-engine scale study** (``--scale`` / ``--smoke``) — 500/1000/
-  2000-client cohorts through the pipelined + auto-chunked engine
-  (DESIGN.md §7), emitting ``BENCH_scale.json`` with peak host memory and
-  s/round per scale point plus same-seed trajectory parities
-  (pipelined-vs-synchronous, auto-vs-explicit chunk); out-of-tolerance
-  parity fails the run, which is the CI gate. Every point runs in a
-  **fresh subprocess** so ``ru_maxrss`` (a process-lifetime high-water
-  mark) is a clean per-point measurement; the sharded point forces a
-  multi-device host platform via XLA_FLAGS.
+  2000-client cohorts through the pipelined + auto-chunked + plan-shaped
+  ragged engine (DESIGN.md §7–8), emitting ``BENCH_scale.json`` with peak
+  host memory, s/round, tier-occupancy / jit-cache / work-fraction
+  telemetry per scale point plus same-seed trajectory parities
+  (pipelined-vs-synchronous, auto-vs-explicit chunk, ragged-vs-masked);
+  out-of-tolerance parity — or a ragged jit cache exceeding its static
+  tier-lattice bound — fails the run, which is the CI gate. A bf16
+  local-buffer twin of the 1000-client point records the storage/accuracy
+  trade, and the full-cardinality speech point (85k×4000-sample clips, 35
+  classes) rides the ragged engine. Every point runs in a **fresh
+  subprocess** so ``ru_maxrss`` (a process-lifetime high-water mark) is a
+  clean per-point measurement; the sharded point forces a multi-device
+  host platform via XLA_FLAGS.
 """
 from __future__ import annotations
 
@@ -60,6 +65,7 @@ def run_point(n_clients: int, chunk_size, rounds: int,
               seed: int = 0, data_scale: float = 1.0, tau: int = 2,
               pipelined: bool = True, dataset: str = "har",
               chunk_budget_mb: float = 1024.0,
+              ragged: bool = True, buffer_dtype: str = "float32",
               compare_pipeline: bool = False) -> dict:
     """One scale point, measured in THIS process (run it in a fresh
     subprocess for a clean ru_maxrss high-water mark). Evaluates EVERY
@@ -89,6 +95,7 @@ def run_point(n_clients: int, chunk_size, rounds: int,
                          seed=seed, caesar=CaesarConfig(tau=tau, b_max=16),
                          chunk_size=chunk_size,
                          chunk_budget_mb=chunk_budget_mb,
+                         ragged=ragged, buffer_dtype=buffer_dtype,
                          pipelined=pipe, sharded=sharded)
 
     def median_warm(h):
@@ -110,13 +117,19 @@ def run_point(n_clients: int, chunk_size, rounds: int,
         * 4 * sim.n_params / 2 ** 20,
         "pipelined": pipelined,
         "sharded": sharded, "n_dev": sim.n_dev,
+        "ragged": ragged, "buffer_dtype": buffer_dtype,
         "rounds": rounds, "n_params": sim.n_params,
         "s_per_round": median_warm(h),
         "compile_s": h.compile_s,
+        # plan-shaped execution telemetry (DESIGN.md §8): per-tier
+        # participant counts, jit-cache size vs its lattice bound, and the
+        # plan-shaped fraction of the masked engine's FLOPs
+        **sim.executor.telemetry(),
         # ru_maxrss is KB on Linux
         "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
         / 1024.0,
-        "local_buf_mb": sim.n_params * n_clients * 4 / 2 ** 20,
+        "local_buf_mb": sim.n_params * n_clients
+        * (2 if buffer_dtype == "bfloat16" else 4) / 2 ** 20,
         "accuracy": h.accuracy,
         "final_acc": h.accuracy[-1],
         "traffic_gb": h.traffic_bits[-1] / 8e9,
@@ -174,6 +187,8 @@ def _tag(p: dict) -> str:
     return (f"{p.get('dataset', 'har')}/n{p['n_clients']}/"
             f"P{p['participants']}/{chunk}"
             + ("/sync" if not p.get("pipelined", True) else "")
+            + ("/masked" if not p.get("ragged", True) else "")
+            + ("/bf16" if p.get("buffer_dtype") == "bfloat16" else "")
             + ("/sharded" if p["sharded"] else ""))
 
 
@@ -187,9 +202,13 @@ def scale_bench(smoke: bool = False) -> dict:
         pipelined = _subprocess_point(chunk_size=None,
                                       compare_pipeline=True, **base)
         explicit = _subprocess_point(chunk_size=4, **base)
-        points = [pipelined, explicit]
+        masked = _subprocess_point(chunk_size=None, ragged=False, **base)
+        points = [pipelined, explicit, masked]
         results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
         results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
+        # the ragged-vs-masked gate (DESIGN.md §8): same plan, same sample
+        # prefixes — drift beyond float-reduction noise fails CI
+        results["parity_ragged_vs_masked"] = _parity(pipelined, masked)
     else:
         # Fig.-10-style 500/1000/2000 scale sweep (10% participation, now
         # pipelined + auto-chunk), plus a DENSE 1000-client cohort (50%
@@ -209,11 +228,19 @@ def scale_bench(smoke: bool = False) -> dict:
         pipelined = _subprocess_point(chunk_size=None, rounds=6,
                                       compare_pipeline=True, **dense)
         explicit = _subprocess_point(chunk_size=25, rounds=6, **dense)
+        masked_dense = _subprocess_point(chunk_size=None, rounds=6,
+                                         ragged=False, **dense)
+        n1000 = _subprocess_point(n_clients=1000, chunk_size=None, **base)
+        # bf16 local-buffer storage at the 1000-client point: halves
+        # local_buf_mb (the only O(n_clients) RSS term); accuracy delta
+        # vs the f32 twin is the cost, reported below
+        n1000_bf16 = _subprocess_point(n_clients=1000, chunk_size=None,
+                                       buffer_dtype="bfloat16", **base)
         points = [
             _subprocess_point(n_clients=500, chunk_size=None, **base),
-            _subprocess_point(n_clients=1000, chunk_size=None, **base),
+            n1000, n1000_bf16,
             _subprocess_point(n_clients=2000, chunk_size=None, **base),
-            pipelined, explicit,
+            pipelined, explicit, masked_dense,
             # sharded: same 1000-client cohort over 4 forced host devices
             _subprocess_point(
                 n_clients=1000, chunk_size=None, sharded=True,
@@ -225,14 +252,43 @@ def scale_bench(smoke: bool = False) -> dict:
             _subprocess_point(dataset="cifar10", n_clients=200,
                               chunk_size=None, rounds=3, participation=0.1,
                               data_scale=0.2, tau=2),
+            # the ROADMAP-leftover speech point: full-cardinality 85k×4000-
+            # sample clips, 35 classes — affordable now that execution is
+            # plan-shaped (the b-spread cuts the conv-heavy training FLOPs)
+            _subprocess_point(dataset="speech", n_clients=200,
+                              chunk_size=None, rounds=3, participation=0.1,
+                              data_scale=1.0, tau=2),
         ]
         results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
         results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
+        results["parity_ragged_vs_masked"] = _parity(pipelined, masked_dense)
         results["pipeline_speedup_dense"] = pipelined["pipeline_speedup"]
+        results["ragged_speedup_dense"] = (masked_dense["s_per_round"]
+                                           / pipelined["s_per_round"])
+        # bf16 storage trade at the 1000-client point (accuracy lists are
+        # full trajectories; the delta is NOT a parity gate — bf16 is a
+        # declared precision trade, not a semantics bug)
+        results["bf16_local_buffer"] = {
+            "local_buf_mb_f32": n1000["local_buf_mb"],
+            "local_buf_mb_bf16": n1000_bf16["local_buf_mb"],
+            "max_acc_diff": max(abs(a - b) for a, b in
+                                zip(n1000["accuracy"],
+                                    n1000_bf16["accuracy"])),
+            "final_acc_f32": n1000["final_acc"],
+            "final_acc_bf16": n1000_bf16["final_acc"],
+        }
     for p in points:
         extra = (f";overlap={p['pipeline_speedup']:.3f}x"
                  f"(sync {p['sync_s_per_round']:.2f}s)"
                  if "pipeline_speedup" in p else "")
+        if p.get("ragged", True):
+            # tier occupancy + jit-cache size: shape explosions fail loudly
+            occ = ",".join(f"{k}:{v}" for k, v in
+                           p.get("tier_occupancy", {}).items())
+            extra += (f";tiers=[{occ}];shapes="
+                      f"{p['compiled_tier_shapes']}"
+                      f"/{p['shape_lattice_bound']};"
+                      f"work={p['work_fraction']:.2f}")
         print(f"fig10_scale/{_tag(p)},{p['s_per_round'] * 1e6:.0f},"
               f"peak_rss_mb={p['peak_rss_mb']:.0f};"
               f"acc={p['final_acc']:.3f};wait_s={p['avg_waiting_s']:.1f}"
@@ -246,7 +302,8 @@ def scale_bench(smoke: bool = False) -> dict:
     (out2 / name).write_text(payload)
     print(f"wrote {name}")
     # parity is a correctness gate, not a report: out-of-tolerance deltas
-    # fail the run (CI runs --smoke and relies on this exit code)
+    # fail the run (CI runs --smoke and relies on this exit code) — AFTER
+    # the JSON write above, so the measurements survive for debugging
     bad = {k: v for k, v in results.items() if k.startswith("parity_")
            and (v["max_acc_diff"] > PARITY_ACC_TOL
                 or v["traffic_rel_diff"] > PARITY_TRAFFIC_TOL)}
@@ -254,6 +311,14 @@ def scale_bench(smoke: bool = False) -> dict:
         raise SystemExit(f"scale parity outside tolerance "
                          f"(acc>{PARITY_ACC_TOL} or "
                          f"traffic>{PARITY_TRAFFIC_TOL}): {bad}")
+    # shape-explosion gate (same convention): a ragged point whose jit
+    # cache exceeds the static lattice bound means tier shapes leaked
+    # round-dependence
+    blown = [_tag(p) for p in points if p.get("ragged", True)
+             and p["compiled_tier_shapes"] > p["shape_lattice_bound"]]
+    if blown:
+        raise SystemExit(f"ragged jit cache exceeded the tier-lattice "
+                         f"bound at: {blown}")
     return results
 
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def round_times(theta_d: jax.Array, theta_u: jax.Array, q_bits: float,
@@ -68,3 +69,59 @@ def optimize_batch_sizes(theta_d: jax.Array, theta_u: jax.Array, q_bits: float,
 def idle_waiting(times: jax.Array) -> jax.Array:
     """Average idle wait under the synchronous barrier: mean(max(M) − M_i)."""
     return jnp.mean(jnp.max(times) - times)
+
+
+# ---------------------------------------------------------------------------
+# Plan-shaped execution tiers (DESIGN.md §8)
+#
+# The Eq. 8–9 planner hands slow devices small batches (b_i ≪ b_max) and
+# baseline policies trim local iterations (τ_i < τ) — executing every
+# participant at the [τ, b_max] cap with zero-weight masks wastes the FLOP
+# difference. The ragged round engine instead quantizes each planned
+# (b_i, τ_i) UP to a rung of a small static lattice and runs one compiled
+# step per occupied tier, so the jit cache is bounded by the lattice, not by
+# the (continuous) plan. Host-side numpy: the lattice assignment is part of
+# round marshalling, never traced.
+# ---------------------------------------------------------------------------
+
+def tier_rungs(lo: int, hi: int) -> np.ndarray:
+    """Ascending halving ladder {lo, …, ⌈hi/4⌉, ⌈hi/2⌉, hi} (int32).
+
+    Built by repeated ⌈r/2⌉ from ``hi`` so non-power-of-two caps keep their
+    exact top rung (b_max itself is always a rung — the Eq.-8 leader runs
+    unpadded). ≤ ⌈log2(hi/lo)⌉+1 rungs.
+    """
+    if not 1 <= lo <= hi:
+        raise ValueError(f"need 1 <= lo <= hi, got ({lo}, {hi})")
+    rungs = []
+    r = int(hi)
+    while r > int(lo):
+        rungs.append(r)
+        r = (r + 1) // 2
+    rungs.append(int(lo))
+    return np.array(sorted(set(rungs)), np.int32)
+
+
+def quantize_plan(batch, taus, b_min: int, b_max: int, tau_max: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Round each planned (b_i, τ_i) UP to its (b, τ) lattice rung.
+
+    Returns (b_tier [P], tau_tier [P]) int32. Rounding up means the tier
+    shape always covers the plan: the planned b_i samples / τ_i iterations
+    are a prefix of the tier batch, and the residual keeps the masked
+    engine's zero-weight semantics — quantization changes shapes only,
+    never which samples train. Plans outside [b_min, b_max] / [1, tau_max]
+    are clamped first (the Eq.-9 clip already guarantees this for Caesar).
+    """
+    b_r = tier_rungs(b_min, b_max)
+    t_r = tier_rungs(1, tau_max)
+    b = np.clip(np.asarray(batch), b_min, b_max)
+    tau = np.clip(np.asarray(taus), 1, tau_max)
+    b_tier = b_r[np.searchsorted(b_r, b)]
+    tau_tier = t_r[np.searchsorted(t_r, tau)]
+    return b_tier.astype(np.int32), tau_tier.astype(np.int32)
+
+
+def tier_lattice_size(b_min: int, b_max: int, tau_max: int) -> int:
+    """Number of (b, τ) tiers — the compile-cache bound's first factor."""
+    return len(tier_rungs(b_min, b_max)) * len(tier_rungs(1, tau_max))

@@ -254,7 +254,8 @@ CACHE_TARGET_MB = 64.0
 
 
 def auto_chunk(n_params: int, n_items: int,
-               budget_mb: float = 1024.0) -> int:
+               budget_mb: float = 1024.0,
+               extra_arrays: float = 0.0) -> int:
     """Pick a participant chunk size from the model size and a host budget.
 
     The round step keeps ~`ROUND_WORKSET_ARRAYS` f32 arrays of shape
@@ -262,19 +263,25 @@ def auto_chunk(n_params: int, n_items: int,
     TIGHTER of the RSS budget and the cache-locality target:
 
         chunk = min(budget_mb, CACHE_TARGET_MB)·2²⁰
-                / (ROUND_WORKSET_ARRAYS · 4 · n_params)
+                / ((ROUND_WORKSET_ARRAYS + extra_arrays) · 4 · n_params)
 
     clamped to [min(MIN_AUTO_CHUNK, n_items), n_items]: tiny models take the
     whole cohort in one chunk (the PR-1 single-vmap engine), huge models
     degrade to at most MIN_AUTO_CHUNK participants at a time before giving
-    up the vmap batching entirely. Consulted by `RoundExecutor` when
+    up the vmap batching entirely. ``extra_arrays`` counts step variants
+    whose scan carry holds MORE than the base working set — error feedback
+    adds ~2 f32 [chunk, n_params] arrays (the gathered residual rows and
+    the recomputed ones), and without the term an EF run overshoots the L3
+    target by ~1.5×. Consulted by `RoundExecutor` when
     ``SimConfig.chunk_size is None``; ``chunk_size=0`` forces one chunk.
     """
     if n_items <= 0:
         raise ValueError(f"n_items must be positive, got {n_items}")
     if n_params <= 0:
         raise ValueError(f"n_params must be positive, got {n_params}")
-    bytes_per_item = ROUND_WORKSET_ARRAYS * 4 * n_params
+    if extra_arrays < 0:
+        raise ValueError(f"extra_arrays must be >= 0, got {extra_arrays}")
+    bytes_per_item = (ROUND_WORKSET_ARRAYS + extra_arrays) * 4 * n_params
     chunk = int(min(budget_mb, CACHE_TARGET_MB) * 2 ** 20 // bytes_per_item)
     return max(min(MIN_AUTO_CHUNK, n_items), min(chunk, n_items))
 

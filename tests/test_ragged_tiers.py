@@ -1,0 +1,273 @@
+"""Plan-shaped ragged round execution (DESIGN.md §8).
+
+The ragged engine is a pure execution-shape optimization: same seed ⇒ same
+participants, same plan, same per-participant sample prefixes as the masked
+[τ, b_max] engine — trajectories agree to float-reduction noise (the padded
+batch reduces in a different association; measured ~6e-8/step on CPU, the
+same class of noise the chunked-vs-unchunked parity tolerates). The jit
+cache must stay bounded by the tier lattice × chunk-rung ladder, never grow
+with rounds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batchsize as BS
+from repro.core import compression as C
+from repro.core.caesar import CaesarConfig
+from repro.fl.simulation import EF_EXTRA_ARRAYS, SimConfig, Simulator
+
+
+def _cfg(**kw):
+    base = dict(dataset="har", rounds=6, n_clients=24, data_scale=0.25,
+                eval_every=2, participation=0.25, seed=3,
+                dataset_kwargs={"sep": 1.8, "noise": 2.0},
+                caesar=CaesarConfig(tau=3, b_max=8))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _traj(**kw):
+    return Simulator(_cfg(**kw)).run()
+
+
+class TestTierRungs:
+    def test_pow2_ladder(self):
+        np.testing.assert_array_equal(BS.tier_rungs(1, 16), [1, 2, 4, 8, 16])
+
+    def test_non_pow2_cap_keeps_exact_top(self):
+        """b_max itself is always a rung: the Eq.-8 leader runs unpadded."""
+        rungs = BS.tier_rungs(1, 48)
+        assert rungs[-1] == 48
+        assert len(rungs) <= 48 .bit_length() + 1
+
+    def test_degenerate_single_rung(self):
+        np.testing.assert_array_equal(BS.tier_rungs(5, 5), [5])
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            BS.tier_rungs(0, 8)
+        with pytest.raises(ValueError):
+            BS.tier_rungs(9, 8)
+
+
+class TestQuantizePlan:
+    """Corners: b_i=b_min, b_i=b_max, τ_i=1, and the round-up invariant."""
+
+    def test_rounds_up_never_down(self):
+        b = np.array([1, 2, 3, 5, 8, 11, 16])
+        bt, tt = BS.quantize_plan(b, np.full(7, 4), 1, 16, 10)
+        np.testing.assert_array_equal(bt, [1, 2, 4, 8, 8, 16, 16])
+        assert (bt >= b).all()
+        np.testing.assert_array_equal(tt, np.full(7, 5))  # τ rung ≥ 4
+
+    def test_b_min_and_b_max_are_fixed_points(self):
+        bt, _ = BS.quantize_plan(np.array([1, 16]), np.array([3, 3]),
+                                 1, 16, 3)
+        np.testing.assert_array_equal(bt, [1, 16])
+
+    def test_tau_one_is_lowest_rung(self):
+        _, tt = BS.quantize_plan(np.array([4]), np.array([1]), 1, 16, 30)
+        assert tt[0] == 1
+
+    def test_out_of_range_plans_clamped(self):
+        bt, tt = BS.quantize_plan(np.array([0, 99]), np.array([0, 99]),
+                                  2, 16, 5)
+        np.testing.assert_array_equal(bt, [2, 16])
+        np.testing.assert_array_equal(tt, [1, 5])
+
+    def test_lattice_size(self):
+        assert BS.tier_lattice_size(1, 16, 1) == 5
+        assert (BS.tier_lattice_size(1, 16, 30)
+                == 5 * len(BS.tier_rungs(1, 30)))
+
+
+class TestTierLayout:
+    """Chunk-rung decomposition: full chunks + a pow2 tail, padding < the
+    remainder, shapes drawn from the static `chunk_rungs` ladder."""
+
+    def _ex(self, **kw):
+        return Simulator(_cfg(**kw)).executor
+
+    def test_full_chunks_plus_pow2_tail(self):
+        ex = self._ex(chunk_size=4, participation=0.5)   # P=12, chunk 4
+        g_pad, slices = ex.tier_layout(11)               # 4+4+(3→rung 4)
+        assert slices == [(0, 4), (4, 4), (8, 4)]
+        assert g_pad == 12
+
+    def test_small_group_single_rung(self):
+        ex = self._ex(chunk_size=4, participation=0.5)
+        assert ex.tier_layout(3) == (4, [(0, 4)])
+        assert ex.tier_layout(1) == (1, [(0, 1)])
+        assert ex.tier_layout(4) == (4, [(0, 4)])
+
+    def test_padding_below_remainder(self):
+        ex = self._ex(chunk_size=5, participation=0.5)
+        for g in range(1, 13):
+            g_pad, slices = ex.tier_layout(g)
+            assert g_pad >= g
+            assert g_pad - g < max(g % ex.chunk, 1) + 1
+            assert all(c in ex.chunk_rungs() for _, c in slices)
+
+    def test_empty_group_rejected(self):
+        with pytest.raises(ValueError):
+            self._ex().tier_layout(0)
+
+
+class TestRaggedParity:
+    """Ragged-vs-masked same-seed trajectories on the heterogeneous
+    capability draw, at the chunked-parity tolerances (reduction-order
+    noise only — same samples, same plan, same aggregation count)."""
+
+    def test_ragged_matches_masked_same_seed(self):
+        h_r = _traj()                        # ragged default
+        h_m = _traj(ragged=False)
+        assert h_r.rounds == h_m.rounds
+        np.testing.assert_allclose(h_r.accuracy, h_m.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_r.traffic_bits, h_m.traffic_bits,
+                                   rtol=1e-5)
+        # the Eq.-7 time model sees the PLAN, not the tier shapes: simulated
+        # time/waiting must be bit-identical across engines
+        assert h_r.waiting_per_round == h_m.waiting_per_round
+        assert h_r.sim_time == h_m.sim_time
+
+    def test_ragged_pipelined_matches_sync_exact(self):
+        h_p = _traj()
+        h_s = _traj(pipelined=False)
+        assert h_p.accuracy == h_s.accuracy
+        assert h_p.traffic_bits == h_s.traffic_bits
+        assert h_p.waiting_per_round == h_s.waiting_per_round
+
+    def test_ragged_chunked_matches_single_chunk(self):
+        h_c = _traj(chunk_size=2)
+        h_one = _traj(chunk_size=0)
+        np.testing.assert_allclose(h_c.accuracy, h_one.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_c.traffic_bits, h_one.traffic_bits,
+                                   rtol=1e-5)
+
+    def test_ragged_sharded_single_device_matches(self):
+        h_ref = _traj(chunk_size=2)
+        h_sh = _traj(chunk_size=2, sharded=True)
+        np.testing.assert_allclose(h_ref.accuracy, h_sh.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_ref.traffic_bits, h_sh.traffic_bits,
+                                   rtol=1e-5)
+
+    def test_first_round_all_first_timers(self):
+        """Round 1: every participant has δ=t (θ_d=0 full-precision
+        download) and an untouched local row — the tier path must handle
+        the all-fresh corner (single plan, possibly many b-tiers)."""
+        h = _traj(rounds=1, eval_every=1)
+        assert np.isfinite(h.accuracy[-1])
+
+    def test_policy_tau_tiers_match_masked(self):
+        """PyramidFL varies τ_i per participant — the τ rungs of the
+        lattice — through the main-thread cap-slice path."""
+        h_r = _traj(scheme="pyramidfl", rounds=4)
+        h_m = _traj(scheme="pyramidfl", rounds=4, ragged=False)
+        np.testing.assert_allclose(h_r.accuracy, h_m.accuracy, atol=5e-3)
+        np.testing.assert_allclose(h_r.traffic_bits, h_m.traffic_bits,
+                                   rtol=1e-5)
+
+
+class TestCompileCacheBounded:
+    """Shape-explosion guard: across many rounds the set of compiled
+    tier-chunk shapes must stay ≤ the lattice bound — compiles are keyed by
+    the static (chunk_rung, τ, b) lattice, never by round count."""
+
+    def test_shapes_bounded_across_20_rounds(self):
+        sim = Simulator(_cfg(rounds=20, eval_every=10))
+        sim.run()
+        tel = sim.executor.telemetry()
+        assert tel["compiled_tier_shapes"] <= tel["shape_lattice_bound"]
+        # the b-heterogeneous draw actually occupies multiple tiers
+        assert len(tel["tier_occupancy"]) > 1
+        assert 0 < tel["work_fraction"] <= 1.0
+
+    def test_occupancy_counts_participants(self):
+        sim = Simulator(_cfg(rounds=4, eval_every=2))
+        sim.run()
+        tel = sim.executor.telemetry()
+        assert sum(tel["tier_occupancy"].values()) == 4 * sim.n_part
+
+
+class TestResetReplay:
+    def test_reset_replays_same_trajectory_warm(self):
+        """`Simulator.reset` + rerun replays the identical seed stream
+        against warm jit caches — the steady-state measurement protocol
+        bench_round uses for the ragged engine."""
+        sim = Simulator(_cfg(rounds=4))
+        h_cold = sim.run()
+        shapes_cold = sim.executor.telemetry()["compiled_tier_shapes"]
+        sim.reset()
+        h_warm = sim.run()
+        assert h_warm.accuracy == h_cold.accuracy
+        assert h_warm.traffic_bits == h_cold.traffic_bits
+        # the replay occupies the same tiers: no new shapes compiled
+        assert (sim.executor.telemetry()["compiled_tier_shapes"]
+                == shapes_cold)
+
+
+class TestEFAutoChunk:
+    """auto_chunk must count the EF carry: with use_error_feedback the scan
+    keeps ~2 extra f32 [chunk, n_params] arrays live, so the EF chunk is
+    the base chunk × 4/6 (else the working set overshoots L3 by ~1.5×)."""
+
+    def test_extra_arrays_shrinks_chunk(self):
+        n_params, budget = 164_000, 32.0
+        base = C.auto_chunk(n_params, 2000, budget)
+        ef = C.auto_chunk(n_params, 2000, budget, extra_arrays=2.0)
+        assert ef == int(budget * 2 ** 20
+                         // ((C.ROUND_WORKSET_ARRAYS + 2.0) * 4 * n_params))
+        assert ef < base
+        assert ef == pytest.approx(base * 4 / 6, abs=1)
+
+    def test_extra_arrays_invalid(self):
+        with pytest.raises(ValueError):
+            C.auto_chunk(1000, 10, extra_arrays=-1.0)
+
+    def test_executor_threads_ef_width(self):
+        kw = dict(participation=0.5, chunk_budget_mb=26.0)
+        sim = Simulator(_cfg(**kw))
+        sim_ef = Simulator(_cfg(caesar=CaesarConfig(
+            tau=3, b_max=8, use_error_feedback=True), **kw))
+        assert sim.executor.chunk == C.auto_chunk(sim.n_params, sim.n_part,
+                                                  26.0)
+        assert sim_ef.executor.chunk == C.auto_chunk(
+            sim.n_params, sim.n_part, 26.0, extra_arrays=EF_EXTRA_ARRAYS)
+        assert sim_ef.executor.chunk < sim.executor.chunk
+
+    def test_ef_rides_ragged_tiers(self):
+        sim = Simulator(_cfg(caesar=CaesarConfig(
+            tau=3, b_max=8, theta_u_min=0.55, theta_u_max=0.6,
+            use_error_feedback=True)))
+        h = sim.run()
+        assert np.isfinite(h.accuracy[-1])
+        assert (np.abs(np.asarray(sim.ef_flat)).sum(axis=1) > 0).any()
+
+
+class TestBf16Buffer:
+    """SimConfig.buffer_dtype="bfloat16" halves the [n_clients, n_params]
+    local buffer; compute stays f32 (gather upcasts, scatter downcasts)."""
+
+    def test_buffer_stored_bf16(self):
+        import jax.numpy as jnp
+        sim = Simulator(_cfg(buffer_dtype="bfloat16"))
+        h = sim.run()
+        assert sim.executor.buf_dtype == jnp.bfloat16
+        assert np.isfinite(h.accuracy[-1])
+        # the global model and EF stay f32
+        assert np.asarray(sim.global_flat).dtype == np.float32
+
+    def test_bf16_close_to_f32(self):
+        h32 = _traj()
+        hbf = _traj(buffer_dtype="bfloat16")
+        # a storage-precision knob, not a semantics knob: trajectories
+        # agree loosely (bf16 has ~3 decimal digits)
+        assert abs(h32.accuracy[-1] - hbf.accuracy[-1]) < 0.05
+
+    def test_bf16_masked_engine_too(self):
+        h = _traj(buffer_dtype="bfloat16", ragged=False, rounds=4)
+        assert np.isfinite(h.accuracy[-1])
+
+    def test_unknown_dtype_rejected(self):
+        with pytest.raises(ValueError):
+            Simulator(_cfg(buffer_dtype="float16"))

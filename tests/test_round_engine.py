@@ -267,12 +267,13 @@ _SUBPROC = textwrap.dedent("""
 
     # multi_host=True exercises init_distributed's single-process fallback
     # + the host_local_array/fetch_global marshalling on a real 4-shard mesh
+    import dataclasses
     cfg = SimConfig(dataset="har", rounds=4, n_clients=24, data_scale=0.25,
                     eval_every=2, participation=1/3, seed=3,
                     dataset_kwargs={"sep": 1.8, "noise": 2.0},
                     caesar=CaesarConfig(tau=3, b_max=8),
                     chunk_size=2, sharded=True, multi_host=True)
-    sim = Simulator(cfg)
+    sim = Simulator(cfg)           # ragged default: per-shard tier groups
     assert sim.n_dev == 4, sim.n_dev
     assert sim.executor.p_shard == 2
     h = sim.run()
@@ -281,6 +282,10 @@ _SUBPROC = textwrap.dedent("""
     # participants per round, so after 4 rounds every shard has updates
     buf = np.asarray(sim.global_flat)
     assert np.isfinite(buf).all()
+    # the masked engine on the same mesh must agree (float-reduction noise)
+    h_m = Simulator(dataclasses.replace(cfg, ragged=False)).run()
+    diff = max(abs(a - b) for a, b in zip(h.accuracy, h_m.accuracy))
+    assert diff <= 5e-3, (h.accuracy, h_m.accuracy)
     print("SHARDED4_OK", h.accuracy[-1])
 """)
 
