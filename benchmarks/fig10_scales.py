@@ -14,7 +14,12 @@ Two studies live here:
   tier-lattice bound — fails the run, which is the CI gate. A bf16
   local-buffer twin of the 1000-client point records the storage/accuracy
   trade, and the full-cardinality speech point (85k×4000-sample clips, 35
-  classes) rides the ragged engine. Every point runs in a **fresh
+  classes) rides the ragged engine. The **registered-scale study**
+  (DESIGN.md §9) fixes a ~1k active cohort while registration grows
+  10k → 100k → 1M: the participation-keyed `ClientStateStore` must keep
+  peak RSS flat (the 100k-vs-10k ratio is a hard CI gate), and a
+  dense-state twin (``state_capacity=0``) gates that slot indirection
+  stays numerically invisible. Every point runs in a **fresh
   subprocess** so ``ru_maxrss`` (a process-lifetime high-water mark) is a
   clean per-point measurement; the sharded point forces a multi-device
   host platform via XLA_FLAGS.
@@ -66,6 +71,7 @@ def run_point(n_clients: int, chunk_size, rounds: int,
               pipelined: bool = True, dataset: str = "har",
               chunk_budget_mb: float = 1024.0,
               ragged: bool = True, buffer_dtype: str = "float32",
+              state_capacity=None, state_offload: str = "none",
               compare_pipeline: bool = False) -> dict:
     """One scale point, measured in THIS process (run it in a fresh
     subprocess for a clean ru_maxrss high-water mark). Evaluates EVERY
@@ -96,6 +102,8 @@ def run_point(n_clients: int, chunk_size, rounds: int,
                          chunk_size=chunk_size,
                          chunk_budget_mb=chunk_budget_mb,
                          ragged=ragged, buffer_dtype=buffer_dtype,
+                         state_capacity=state_capacity,
+                         state_offload=state_offload,
                          pipelined=pipe, sharded=sharded)
 
     def median_warm(h):
@@ -128,8 +136,13 @@ def run_point(n_clients: int, chunk_size, rounds: int,
         # ru_maxrss is KB on Linux
         "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
         / 1024.0,
+        # dense-equivalent O(n_clients) figure kept for continuity; the
+        # store telemetry below reports what is actually resident
+        # (pool_mb ≪ dense_mb once registered ≫ active cohort)
         "local_buf_mb": sim.n_params * n_clients
         * (2 if buffer_dtype == "bfloat16" else 4) / 2 ** 20,
+        "state_capacity": state_capacity, "state_offload": state_offload,
+        "store": sim.store.telemetry(),
         "accuracy": h.accuracy,
         "final_acc": h.accuracy[-1],
         "traffic_gb": h.traffic_bits[-1] / 8e9,
@@ -178,6 +191,30 @@ def _parity(a: dict, b: dict) -> dict:
 # same-seed runs must agree to eval quantization noise; CI fails above this
 PARITY_ACC_TOL = 5e-3
 PARITY_TRAFFIC_TOL = 1e-5
+# sublinear-state gate: a 10× registered-client increase at the SAME active
+# cohort may at most double peak RSS (pool + host maps, not O(n) buffers)
+REGISTERED_RSS_RATIO_MAX = 2.0
+
+
+def _registered_points(base: dict) -> tuple[list, dict]:
+    """The registered-scale study (DESIGN.md §9): oppo_ts LR cohorts with a
+    FIXED ~1k active cohort while the registered population grows 10×/100×.
+    The grow-on-demand ClientStateStore keeps resident state keyed to
+    participation, so peak RSS must track the cohort, not registration —
+    the ratio between the points is the CI gate."""
+    reg10k = _subprocess_point(n_clients=10_000, participation=0.1, **base)
+    reg100k = _subprocess_point(n_clients=100_000, participation=0.01,
+                                **base)
+    summary = {
+        "peak_rss_mb_10k": reg10k["peak_rss_mb"],
+        "peak_rss_mb_100k": reg100k["peak_rss_mb"],
+        "rss_ratio_100k_vs_10k": reg100k["peak_rss_mb"]
+        / max(reg10k["peak_rss_mb"], 1e-9),
+        "pool_mb_100k": reg100k["store"]["pool_mb"],
+        "dense_mb_100k": reg100k["store"]["dense_mb"],
+        "resident_100k": reg100k["store"]["resident"],
+    }
+    return [reg10k, reg100k], summary
 
 
 def _tag(p: dict) -> str:
@@ -189,6 +226,9 @@ def _tag(p: dict) -> str:
             + ("/sync" if not p.get("pipelined", True) else "")
             + ("/masked" if not p.get("ragged", True) else "")
             + ("/bf16" if p.get("buffer_dtype") == "bfloat16" else "")
+            + ("/dense-state" if p.get("state_capacity") == 0 else "")
+            + (f"/{p['state_offload']}"
+               if p.get("state_offload", "none") != "none" else "")
             + ("/sharded" if p["sharded"] else ""))
 
 
@@ -203,12 +243,20 @@ def scale_bench(smoke: bool = False) -> dict:
                                       compare_pipeline=True, **base)
         explicit = _subprocess_point(chunk_size=4, **base)
         masked = _subprocess_point(chunk_size=None, ragged=False, **base)
-        points = [pipelined, explicit, masked]
+        # dense-state twin: state_capacity=0 pre-materializes every row —
+        # slot indirection must be numerically invisible (bit-identical)
+        dense_state = _subprocess_point(chunk_size=None, state_capacity=0,
+                                        **base)
+        reg_points, results["registered_scale"] = _registered_points(
+            dict(dataset="oppo_ts", rounds=3, data_scale=0.05, tau=1,
+                 chunk_size=None))
+        points = [pipelined, explicit, masked, dense_state, *reg_points]
         results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
         results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
         # the ragged-vs-masked gate (DESIGN.md §8): same plan, same sample
         # prefixes — drift beyond float-reduction noise fails CI
         results["parity_ragged_vs_masked"] = _parity(pipelined, masked)
+        results["parity_pool_vs_dense"] = _parity(pipelined, dense_state)
     else:
         # Fig.-10-style 500/1000/2000 scale sweep (10% participation, now
         # pipelined + auto-chunk), plus a DENSE 1000-client cohort (50%
@@ -259,9 +307,32 @@ def scale_bench(smoke: bool = False) -> dict:
                               chunk_size=None, rounds=3, participation=0.1,
                               data_scale=1.0, tau=2),
         ]
+        # registered-scale study (DESIGN.md §9): 10k → 100k → 1M registered
+        # clients at a fixed ~1k active cohort; resident state is
+        # participation-keyed, so RSS stays flat while dense_mb grows 100×
+        reg_base = dict(dataset="oppo_ts", rounds=3, data_scale=0.05,
+                        tau=1, chunk_size=None)
+        reg_points, results["registered_scale"] = _registered_points(
+            reg_base)
+        reg1m = _subprocess_point(n_clients=1_000_000, participation=0.001,
+                                  **reg_base)
+        results["registered_scale"].update({
+            "peak_rss_mb_1m": reg1m["peak_rss_mb"],
+            "rss_ratio_1m_vs_10k": reg1m["peak_rss_mb"]
+            / max(results["registered_scale"]["peak_rss_mb_10k"], 1e-9),
+            "pool_mb_1m": reg1m["store"]["pool_mb"],
+            "dense_mb_1m": reg1m["store"]["dense_mb"],
+        })
+        # dense-state parity twin at the 1000-client point: slot
+        # indirection must be numerically invisible at scale too
+        n1000_dense_state = _subprocess_point(n_clients=1000,
+                                              chunk_size=None,
+                                              state_capacity=0, **base)
+        points += [*reg_points, reg1m, n1000_dense_state]
         results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
         results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
         results["parity_ragged_vs_masked"] = _parity(pipelined, masked_dense)
+        results["parity_pool_vs_dense"] = _parity(n1000, n1000_dense_state)
         results["pipeline_speedup_dense"] = pipelined["pipeline_speedup"]
         results["ragged_speedup_dense"] = (masked_dense["s_per_round"]
                                            / pipelined["s_per_round"])
@@ -289,6 +360,11 @@ def scale_bench(smoke: bool = False) -> dict:
                       f"{p['compiled_tier_shapes']}"
                       f"/{p['shape_lattice_bound']};"
                       f"work={p['work_fraction']:.2f}")
+        st = p.get("store", {})
+        if st:
+            extra += (f";pool_mb={st['pool_mb']:.1f}"
+                      f"(dense {st['dense_mb']:.1f});"
+                      f"resident={st['resident']}/{st['registered']}")
         print(f"fig10_scale/{_tag(p)},{p['s_per_round'] * 1e6:.0f},"
               f"peak_rss_mb={p['peak_rss_mb']:.0f};"
               f"acc={p['final_acc']:.3f};wait_s={p['avg_waiting_s']:.1f}"
@@ -319,6 +395,16 @@ def scale_bench(smoke: bool = False) -> dict:
     if blown:
         raise SystemExit(f"ragged jit cache exceeded the tier-lattice "
                          f"bound at: {blown}")
+    # sublinear-state gate (DESIGN.md §9): peak RSS at 100k registered
+    # clients must stay within REGISTERED_RSS_RATIO_MAX of the
+    # same-active-cohort 10k control — superlinear growth means the store
+    # leaked an O(n_clients) resident term
+    ratio = results["registered_scale"]["rss_ratio_100k_vs_10k"]
+    if ratio > REGISTERED_RSS_RATIO_MAX:
+        raise SystemExit(
+            f"peak RSS grew superlinearly with registered clients: "
+            f"100k-vs-10k ratio {ratio:.2f} > {REGISTERED_RSS_RATIO_MAX} "
+            f"({results['registered_scale']})")
     return results
 
 

@@ -105,8 +105,15 @@ class CheckpointManager:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in path) or "_root"
             arr = arrays[key]
-            restored.append(jax.numpy.asarray(arr).astype(leaf.dtype)
-                            if hasattr(leaf, "dtype") else arr)
+            if isinstance(leaf, np.ndarray):
+                # host-side template leaves (e.g. ClientStateStore's slot
+                # maps / centroids) restore as numpy — forcing them onto
+                # the device would silently change the owner's semantics
+                restored.append(np.asarray(arr, leaf.dtype))
+            elif hasattr(leaf, "dtype"):
+                restored.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+            else:
+                restored.append(arr)
         return jax.tree_util.tree_unflatten(td, restored)
 
     def restore_latest(self, like: Any) -> Optional[tuple[Any, int]]:

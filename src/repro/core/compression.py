@@ -221,6 +221,34 @@ def unflatten_vector(flat: jax.Array, spec: FlatSpec) -> Pytree:
     return jax.tree_util.tree_unflatten(spec.treedef, out)
 
 
+def stochastic_round_cast(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """f32 → ``dtype`` downcast with stochastic rounding (bf16 only).
+
+    Round-to-nearest-even quantizes every client's scatter the same way
+    each round, so the [n_clients, n_params] bf16 buffer's quantization
+    error is a bias, not a noise — measured as the ~2e-3 accuracy delta in
+    BENCH_scale.json's `bf16_local_buffer` entry. Adding uniform random
+    low bits before truncating rounds x up with probability equal to the
+    fractional position of x between its two representable bf16 neighbours
+    (E[round(x)] = x — unbiased), turning that bias into zero-mean noise
+    that averages out across rounds and clients.
+
+    Exactly-representable values are fixed points: their 16 low mantissa
+    bits are zero, so no carry can propagate whatever the random bits are.
+    The masked engines rely on this — padded/masked rows rewrite the
+    gathered row value unchanged. Non-bf16 targets fall back to a plain
+    ``astype`` (f32 → f32 is the identity; SR of other widths is not a
+    path the buffer supports).
+    """
+    if dtype != jnp.bfloat16:
+        return x.astype(dtype)
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.bits(key, bits.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    rounded = (bits + noise) >> 16
+    return jax.lax.bitcast_convert_type(rounded.astype(jnp.uint16),
+                                        jnp.bfloat16)
+
+
 def chunk_layout(n_items: int, chunk: int | None
                  ) -> tuple[int, int, int]:
     """(chunk, n_padded, n_chunks) for fixed-size chunking of ``n_items``.

@@ -1,0 +1,659 @@
+"""Pipelined round driver for Track A (paper Algorithm 1; DESIGN.md §1,
+§7–§9).
+
+This module owns the orchestration shell of the layered round engine:
+
+* `SimConfig` — the one simulation config consumed by every layer;
+* `History` — eval-aligned metric series + per-round raw samples;
+* `RoundPkg` — one round's prefetched inputs (participants, capability
+  snapshot, plan, tier- or cap-shaped batches);
+* `Simulator` — builds data/partition/capability/planner/executor, creates
+  the per-run `repro.fl.state.ClientStateStore` row pool, and runs the
+  (optionally pipelined) round loop with Eq.-7 time/waiting accounting and
+  payload-faithful traffic accounting.
+
+The layers it drives live in sibling modules: `repro.fl.planner`
+(RoundPlanner), `repro.fl.executor` (RoundExecutor + TierGroup),
+`repro.fl.state` (ClientStateStore). `repro.fl.simulation` re-exports
+everything as the stable public surface.
+
+Pipelining contract: host producer work for round t+1 runs on a worker
+thread while the device executes round t. Every round draws from its own
+``np.random.SeedSequence(seed, spawn_key=(2, t))`` stream and the batch-
+index draw is always cap-shaped (plan-independent), so the pipelined and
+synchronous (``SimConfig.pipelined=False``) loops consume identical
+randomness and are same-seed identical. The worker NEVER touches the
+state store — slot activation/eviction happens on the main thread inside
+the executor step (the pool is donated through the in-flight jitted step;
+a worker-side mutation would race the device).
+
+Client splits are held CSR-style (one flat index array + offsets) rather
+than as a per-client list: at 100k–1M registered clients the list-of-arrays
+overhead (~100 B/client) would rival the sample data itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import batchsize as BS
+from repro.core import caesar as CA
+from repro.core import compression as C
+from repro.data import partition, synthetic
+from repro.fl import baselines as BL
+from repro.fl.capability import CapabilityModel
+from repro.fl.executor import RoundExecutor, TierGroup
+from repro.fl.planner import RoundPlanner
+from repro.fl.state import ClientStateStore
+from repro.launch import mesh as MESH
+from repro.models import paper_models as PM
+from repro.optim import sgd as SGD
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    dataset: str = "cifar10"
+    model: Optional[str] = None          # default: paper pairing
+    scheme: str = "caesar"               # caesar | fedavg | fic | cac | flexcom | prowd | pyramidfl
+    n_clients: int = 100
+    participation: float = 0.1
+    rounds: int = 100
+    p_heterogeneity: float = 5.0         # paper's p = 1/δ (default 5)
+    data_scale: float = 0.05             # dataset size multiplier (CPU budget)
+    eval_every: int = 5
+    eval_samples: int = 1000
+    seed: int = 0
+    caesar: CA.CaesarConfig = dataclasses.field(default_factory=CA.CaesarConfig)
+    sgd: SGD.SGDConfig = dataclasses.field(default_factory=SGD.SGDConfig)
+    target_accuracy: Optional[float] = None
+    # compression-operator backend: auto | pallas | interpret | jnp
+    backend: str = "auto"
+    # execution layer (DESIGN.md §7): participants per chunk. None ⇒
+    # auto-tuned from n_params, the cohort, chunk_budget_mb and the EF carry
+    # (core.compression.auto_chunk); 0 ⇒ one chunk of all participants (the
+    # PR-1 single-vmap engine); an int bounds the per-round [P, n_params]
+    # working set at chunk_size × n_params.
+    chunk_size: Optional[int] = None
+    # host working-set budget (MB) the auto-tuned chunk targets; ignored
+    # when chunk_size is given explicitly.
+    chunk_budget_mb: float = 1024.0
+    # overlap host batch sampling for round t+1 with the device step for
+    # round t (worker thread; same-seed identical to the synchronous loop —
+    # every round owns a SeedSequence-derived RNG stream either way).
+    pipelined: bool = True
+    # plan-shaped ragged execution (DESIGN.md §8): run each participant at
+    # its quantized (b, τ) tier shape instead of the [τ, b_max] cap with
+    # zero-weight masks. False keeps the uniform-cap masked engine — the
+    # parity baseline for the ragged-vs-masked CI gate.
+    ragged: bool = True
+    # storage dtype of the client-state pool rows. "bfloat16" halves the
+    # pool; compute stays f32 (gather upcasts, scatter downcasts — see
+    # `stochastic_round`), so this is a memory/accuracy trade, NOT
+    # same-seed identical to f32.
+    buffer_dtype: str = "float32"
+    # client-state pool sizing (DESIGN.md §9): None ⇒ grow on demand with
+    # the ever-participated cohort (no eviction — bit-identical to the
+    # dense buffer); 0 ⇒ dense [n_clients] pool (exact legacy semantics
+    # and footprint); int > 0 ⇒ hard row cap with staleness-tiered LRU
+    # eviction onto cluster centroids (must cover the per-round cohort).
+    state_capacity: Optional[int] = None
+    # what eviction does with the exact row: "none" keeps only the
+    # staleness-tier centroid; "host"/"memmap" additionally spill the
+    # exact row (numpy / on-disk) so re-activation is exact paging.
+    state_offload: str = "none"
+    # directory for "memmap" spill files (default: a fresh temp dir)
+    state_dir: Optional[str] = None
+    # bf16 pools: stochastically round the scatter downcast (unbiased,
+    # per-round seed) instead of round-to-nearest-even. No effect at f32.
+    stochastic_round: bool = True
+    # shard the client-state pool + participant chunks over the "data"
+    # mesh (DESIGN.md §7). Requires n_clients divisible by the device
+    # count; participants are drawn stratified per shard so every device
+    # owns its participants' pool rows.
+    sharded: bool = False
+    # initialize jax.distributed and build the "data" mesh over every
+    # host's devices (process-local pool rows, psum unchanged). Requires
+    # sharded=True; a no-op single-process falls back to the local mesh.
+    multi_host: bool = False
+    # preliminary-study variants (Fig. 1): compress only one direction
+    fic_down_only: bool = False
+    fic_up_only: bool = False
+    # synthetic-task difficulty overrides (e.g. {"sep": 2.0, "noise": 1.0})
+    dataset_kwargs: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class History:
+    """Eval-aligned series: every list below has one entry per eval round
+    (``rounds[i]`` is the round number of entry i). ``waiting`` is a RUNNING
+    MEAN over all rounds simulated so far; ``wall`` is the running WARM mean
+    — round 1 (which folds the one-time XLA compile into its wall time) is
+    excluded and reported separately as ``compile_s``. Per-round raw samples
+    (round 1 included) live in the ``*_per_round`` lists. Under the ragged
+    engine, later rounds that first touch a new tier shape also pay a
+    one-time compile inside their wall sample — medians, not means, are the
+    robust per-round statistic."""
+    rounds: list = dataclasses.field(default_factory=list)
+    sim_time: list = dataclasses.field(default_factory=list)      # cumulative s
+    traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
+    accuracy: list = dataclasses.field(default_factory=list)
+    waiting: list = dataclasses.field(default_factory=list)       # running mean s
+    wall: list = dataclasses.field(default_factory=list)          # warm mean s
+    waiting_per_round: list = dataclasses.field(default_factory=list)
+    wall_per_round: list = dataclasses.field(default_factory=list)
+    compile_s: float = 0.0     # round-1 wall (jit compile + first dispatch)
+
+    def summary(self) -> dict:
+        return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
+                "total_time_s": self.sim_time[-1] if self.sim_time else 0.0,
+                "total_traffic_gb": (self.traffic_bits[-1] / 8e9
+                                     if self.traffic_bits else 0.0)}
+
+    def to_target(self, acc: float):
+        """(time_s, traffic_gb, round) when ``acc`` first reached, else None."""
+        for r, t, tr, a in zip(self.rounds, self.sim_time, self.traffic_bits,
+                               self.accuracy):
+            if a >= acc:
+                return t, tr / 8e9, r
+        return None
+
+
+@dataclasses.dataclass
+class RoundPkg:
+    """Everything the driver needs to execute one round, produced by the
+    prefetch path (worker thread when pipelined). ``plan`` and ``tiers``
+    are filled for Caesar (whose planner is execution-independent);
+    baseline policies plan on the main thread from ``xs``/``ys``."""
+    parts: np.ndarray
+    mu: np.ndarray
+    bw_d: np.ndarray
+    bw_u: np.ndarray
+    plan: Optional[tuple] = None      # (theta_d, theta_u, batch, taus) [P]
+    xs: Optional[np.ndarray] = None   # cap-shaped [P, τ, b_max, ...]
+    ys: Optional[np.ndarray] = None
+    tiers: Optional[list] = None      # list[TierGroup]
+
+
+# ---------------------------------------------------------------------------
+# The simulator: orchestration + accounting
+# ---------------------------------------------------------------------------
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        if cfg.multi_host and not cfg.sharded:
+            raise ValueError("multi_host=True requires sharded=True (the "
+                             "multi-host mesh is the sharded 'data' axis)")
+        if cfg.multi_host:
+            # MUST precede every jax call in this process (backend resolve,
+            # param init): jax.distributed.initialize refuses to run after
+            # the backends are up. Single-process (no cluster) falls back
+            # cleanly, but say so — N processes silently simulating in
+            # isolation would look like a successful multi-host run.
+            if not MESH.init_distributed():
+                warnings.warn(
+                    "multi_host=True but no multi-process jax runtime was "
+                    "detected (or jax was already initialized); running "
+                    "single-process on the local devices", stacklevel=2)
+        self.backend = C.resolve_backend(cfg.backend)
+        ds_fn = synthetic.DATASETS[cfg.dataset]
+        self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
+                          **(cfg.dataset_kwargs or {}))
+        model_name = cfg.model or PM.DATASET_MODEL[cfg.dataset]
+        init_fn, self.apply_fn = PM.MODELS[model_name]
+        feat_kw = {}
+        if model_name == "lr":
+            feat_kw = {"n_features": self.data.x_train.shape[-1]}
+        self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
+                               n_classes=self.data.n_classes, **feat_kw)
+        # flatten ONCE: the engine state is flat from here on
+        self.flat0, self.spec = C.flatten_tree(self.params0)
+        self.n_params = self.spec.n_params
+        self.model_bits = self.n_params * C.FULL_BITS
+
+        splits, label_dist, volumes = partition.dirichlet_partition(
+            self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
+        # CSR storage: the per-client list-of-arrays costs ~100 B/client of
+        # pure object overhead — real money at 100k–1M registered clients
+        self._split_off = np.zeros(cfg.n_clients + 1, np.int64)
+        self._split_off[1:] = np.cumsum([len(s) for s in splits])
+        self._split_idx = np.concatenate(splits).astype(np.int64)
+        del splits
+        self.volumes = volumes
+        self.label_dist = label_dist
+        self.cap = CapabilityModel(cfg.n_clients, cfg.seed)
+
+        self.mesh = MESH.make_data_mesh() if cfg.sharded else None
+        self.n_dev = self.mesh.shape["data"] if self.mesh is not None else 1
+        if cfg.n_clients % self.n_dev:
+            raise ValueError(f"n_clients ({cfg.n_clients}) must divide over "
+                             f"{self.n_dev} shards")
+        n_part = max(1, int(round(cfg.participation * cfg.n_clients)))
+        # sharded rounds need equal per-shard cohorts (static shapes)
+        self.n_part = max(self.n_dev, (n_part // self.n_dev) * self.n_dev)
+        if self.n_part != n_part:
+            warnings.warn(
+                f"sharded mode adjusted the cohort from {n_part} to "
+                f"{self.n_part} participants/round ({self.n_dev} shards "
+                "need equal per-shard cohorts); pick a participation whose "
+                "cohort divides the device count to silence this",
+                stacklevel=2)
+
+        self.policy = None if cfg.scheme == "caesar" else \
+            self._make_policy(cfg.scheme)
+        self.planner = RoundPlanner(cfg, volumes, label_dist,
+                                    self.model_bits, self.policy)
+        self.executor = RoundExecutor(
+            cfg, self.apply_fn, self.spec, self.backend,
+            quantize=bool(getattr(self.policy, "quantize", False)),
+            n_part=self.n_part, mesh=self.mesh,
+            use_ef=cfg.caesar.use_error_feedback)
+        self.store: Optional[ClientStateStore] = None
+
+        def evaluate(flat_params, x, y):
+            logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
+                                   x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._eval = jax.jit(evaluate)
+
+    # planner-owned state, exposed for tests/benchmarks
+    @property
+    def caesar_state(self):
+        return self.planner.caesar_state
+
+    @property
+    def grad_norms(self):
+        return self.planner.grad_norms
+
+    @property
+    def splits(self):
+        """Per-client sample-index views over the CSR split storage (compat
+        shim for the old list-of-arrays attribute)."""
+        return [self._split_idx[self._split_off[i]:self._split_off[i + 1]]
+                for i in range(self.cfg.n_clients)]
+
+    def _make_policy(self, name):
+        if name == "fic":
+            return BL.FIC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        if name == "cac":
+            return BL.CAC(compress_down=not self.cfg.fic_up_only,
+                          compress_up=not self.cfg.fic_down_only)
+        return BL.POLICIES[name]()
+
+    def _make_store(self) -> ClientStateStore:
+        """Fresh per-run client-state pool. ``init_row`` holds the initial
+        model pre-quantized to the storage dtype, so a pooled first-timer's
+        activation write bit-matches the dense engine's broadcast init."""
+        dt = self.executor.buf_dtype
+        init_row = np.asarray(jnp.asarray(self.flat0, dt), np.float32)
+        return ClientStateStore(
+            self.cfg.n_clients, self.n_params, init_row,
+            ef_width=self.executor.ef_width, dtype=dt,
+            capacity=self.cfg.state_capacity, cohort=self.n_part,
+            n_shards=self.n_dev, mesh=self.mesh,
+            offload=self.cfg.state_offload,
+            offload_dir=self.cfg.state_dir)
+
+    # ------------------------------------------------------------------
+    # Host-side producer work (participant draw + plan + batch gather).
+    # Every round owns a SeedSequence-derived RNG stream, so the pipelined
+    # and synchronous drivers consume identical randomness — a shared
+    # generator cannot be read out of lockstep from a worker thread.
+    # ------------------------------------------------------------------
+
+    def _round_rng(self, t: int) -> np.random.Generator:
+        """Deterministic per-round stream: SeedSequence(seed, (2, t)).
+        Spawn-key kinds 0/1 belong to CapabilityModel's per-epoch/per-round
+        streams; 2 is the round's sampling stream (3 the executor's
+        stochastic-rounding stream)."""
+        return np.random.default_rng(
+            np.random.SeedSequence(self.cfg.seed, spawn_key=(2, t)))
+
+    def _select_participants(self, rng: np.random.Generator) -> np.ndarray:
+        """Uniform draw; stratified per shard in sharded mode (each device
+        must own its participants' pool rows). With one device the two
+        are the same draw."""
+        n, d = self.cfg.n_clients, self.n_dev
+        if d <= 1:
+            return rng.choice(n, self.n_part, replace=False)
+        rows, ps = n // d, self.n_part // d
+        return np.concatenate([
+            rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
+                       replace=False)
+            for s in range(d)])
+
+    def _draw_indices(self, rng: np.random.Generator,
+                      parts: np.ndarray) -> np.ndarray:
+        """Cap-shaped batch-index draw [P, τ, b_max] — ALWAYS at the caps,
+        whatever the plan says: the tier engine consumes a per-participant
+        [:τ_tier, :b_tier] PREFIX of this draw, so the randomness stream is
+        plan-independent (ragged and masked runs draw identically) and a
+        participant's first b_i samples of iteration k are the same samples
+        under either engine."""
+        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
+        off, pool = self._split_off, self._split_idx
+        idx = np.empty((len(parts), tau_cap, b_cap), np.intp)
+        for i, ci in enumerate(parts):
+            idx[i] = rng.choice(pool[off[ci]:off[ci + 1]],
+                                size=(tau_cap, b_cap), replace=True)
+        return idx
+
+    def _gather_cap(self, idx: np.ndarray, out):
+        """Gather the cap-shaped training batches for ``idx`` into ``out``
+        (a preallocated (xs, ys) pair — filled IN PLACE so the pipelined
+        driver's two persistent buffer sets never mmap/munmap tens of MB
+        mid-step, which would stall the XLA threads with TLB shootdowns)."""
+        xtr, ytr = self.data.x_train, self.data.y_train
+        xs, ys = out
+        flat = idx.reshape(-1)
+        np.take(xtr, flat, axis=0, out=xs.reshape((-1,) + xtr.shape[1:]))
+        np.take(ytr, flat, axis=0, out=ys.reshape((-1,) + ytr.shape[1:]))
+        return xs, ys
+
+    def _prefetch_round(self, t: int, out=None):
+        """Round t's cap-shaped host sampling: (participants, xs, ys).
+
+        Pure numpy on data that is read-only after __init__. The batch
+        *indices* need only the caps (b_max, τ) — plan-dependent
+        per-participant (batch, τ_i) enter later as masks (`_batch_masks`)
+        or tier prefixes. Kept as the cap-gather primitive for the masked
+        engine, policy schemes, and external callers (bench_round's
+        LegacyEngine drives it directly)."""
+        rng = self._round_rng(t)
+        parts = self._select_participants(rng)
+        idx = self._draw_indices(rng, parts)
+        if out is None:
+            out = self._alloc_batch_buffers(len(parts))
+        xs, ys = self._gather_cap(idx, out)
+        return parts, xs, ys
+
+    def _alloc_batch_buffers(self, n_parts: int):
+        """One cap-shaped (xs, ys) buffer set for `_prefetch_round`."""
+        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
+        xtr, ytr = self.data.x_train, self.data.y_train
+        return (np.empty((n_parts, tau_cap, b_cap) + xtr.shape[1:],
+                         xtr.dtype),
+                np.empty((n_parts, tau_cap, b_cap) + ytr.shape[1:],
+                         ytr.dtype))
+
+    @staticmethod
+    def _batch_masks(batch_sizes, taus, b_cap, tau_cap):
+        """Per-participant (sample-weight [P,τ,b], iter-mask [P,τ]) masks
+        realizing the planned batch sizes / local-iteration counts on the
+        prefetched cap-shaped batches."""
+        p = len(batch_sizes)
+        ws = np.zeros((p, tau_cap, b_cap), np.float32)
+        for i, b in enumerate(batch_sizes):
+            ws[i, :, :int(b)] = 1.0
+        ims = (np.arange(tau_cap)[None, :]
+               < np.asarray(taus)[:, None]).astype(np.float32)
+        return ws, ims
+
+    # -- plan-shaped tier marshalling (DESIGN.md §8) -----------------------
+
+    def _plan_tiers(self, batch: np.ndarray, taus: np.ndarray) -> list:
+        """Quantize the plan to the (b, τ) lattice and group participants
+        by tier. Deterministic processing order: tiers descending by
+        (τ, b), participants within a tier in parts order (stable)."""
+        ccfg = self.cfg.caesar
+        bt, tt = BS.quantize_plan(batch, taus, ccfg.b_min, ccfg.b_max,
+                                  ccfg.tau)
+        groups = []
+        for tau_t, b_t in sorted(set(zip(tt.tolist(), bt.tolist())),
+                                 reverse=True):
+            pos = np.flatnonzero((tt == tau_t) & (bt == b_t))
+            groups.append((int(b_t), int(tau_t), pos))
+        return groups
+
+    def _tier_masks(self, batch, taus, pos, b_t, tau_t, g_pad):
+        """Rung-padded (ws [g_pad,τ,b], ims [g_pad,τ]) realizing the exact
+        planned (b_i, τ_i) inside the tier shape — identical semantics to
+        `_batch_masks` at the cap, restricted to the tier prefix."""
+        g = len(pos)
+        ws = np.zeros((g_pad, tau_t, b_t), np.float32)
+        ws[:g] = (np.arange(b_t)[None, None, :]
+                  < np.asarray(batch)[pos, None, None])
+        ims = np.zeros((g_pad, tau_t), np.float32)
+        ims[:g] = (np.arange(tau_t)[None, :] < np.asarray(taus)[pos, None])
+        return ws, ims
+
+    def _ensure_flat_buffers(self, bufs: dict, x_rows: int):
+        """Grow-on-demand flat sample pools the tier gather carves into —
+        persistent per slot, so the steady state allocates nothing (the
+        per-round total Σ g_pad·τ_t·b_t varies with tier occupancy)."""
+        xtr, ytr = self.data.x_train, self.data.y_train
+        cur = bufs.get("flat")
+        if cur is None or cur[0].shape[0] < x_rows:
+            bufs["flat"] = (np.empty((x_rows,) + xtr.shape[1:], xtr.dtype),
+                            np.empty((x_rows,) + ytr.shape[1:], ytr.dtype))
+        return bufs["flat"]
+
+    def _tiers_from_idx(self, idx: np.ndarray, batch, taus,
+                        bufs: dict) -> list:
+        """Tier-shaped batch gather (the pipelined worker's path): for each
+        tier, gather ONLY the [:τ_t, :b_t] prefix of the cap-shaped index
+        draw — host sampling bytes shrink by the plan-shaped work factor."""
+        groups = self._plan_tiers(batch, taus)
+        layouts = [self.executor.tier_layout(len(pos))
+                   for _, _, pos in groups]
+        total = sum(gl[0] * tau_t * b_t
+                    for (b_t, tau_t, _), gl in zip(groups, layouts))
+        xflat, yflat = self._ensure_flat_buffers(bufs, total)
+        xtr, ytr = self.data.x_train, self.data.y_train
+        feat = xtr.shape[1:]
+        tiers, off = [], 0
+        for (b_t, tau_t, pos), (g_pad, slices) in zip(groups, layouts):
+            g = len(pos)
+            rows = g_pad * tau_t * b_t
+            xv = xflat[off:off + rows]
+            yv = yflat[off:off + rows]
+            off += rows
+            sel = idx[pos, :tau_t, :b_t].reshape(-1)
+            np.take(xtr, sel, axis=0, out=xv[:sel.size])
+            np.take(ytr, sel, axis=0, out=yv[:sel.size])
+            if rows > sel.size:          # zero the rung padding
+                xv[sel.size:] = 0
+                yv[sel.size:] = 0
+            ws, ims = self._tier_masks(batch, taus, pos, b_t, tau_t, g_pad)
+            tiers.append(TierGroup(
+                b=b_t, tau=tau_t, pos=pos, g_pad=g_pad, slices=slices,
+                xs=xv.reshape((g_pad, tau_t, b_t) + feat),
+                ys=yv.reshape((g_pad, tau_t, b_t)), ws=ws, ims=ims))
+        return tiers
+
+    def _tiers_from_cap(self, xs: np.ndarray, ys: np.ndarray, batch,
+                        taus) -> list:
+        """Tier groups sliced out of an already cap-gathered batch (the
+        policy-scheme path, where the plan needs execution feedback and is
+        only known on the main thread after the worker gathered)."""
+        groups = self._plan_tiers(batch, taus)
+        tiers = []
+        for b_t, tau_t, pos in groups:
+            g = len(pos)
+            g_pad, slices = self.executor.tier_layout(g)
+            xs_t = np.zeros((g_pad, tau_t, b_t) + xs.shape[3:], xs.dtype)
+            xs_t[:g] = xs[pos, :tau_t, :b_t]
+            ys_t = np.zeros((g_pad, tau_t, b_t), ys.dtype)
+            ys_t[:g] = ys[pos, :tau_t, :b_t]
+            ws, ims = self._tier_masks(batch, taus, pos, b_t, tau_t, g_pad)
+            tiers.append(TierGroup(b=b_t, tau=tau_t, pos=pos, g_pad=g_pad,
+                                   slices=slices, xs=xs_t, ys=ys_t, ws=ws,
+                                   ims=ims))
+        return tiers
+
+    def _prefetch_pkg(self, t: int, bufs: dict) -> RoundPkg:
+        """The full producer step for round t (worker thread when
+        pipelined): draw → capability snapshot → [Caesar: plan + state
+        advance] → batch gather (tier-shaped when the plan is known,
+        cap-shaped otherwise). Never touches the state store."""
+        rng = self._round_rng(t)
+        parts = self._select_participants(rng)
+        idx = self._draw_indices(rng, parts)
+        mu, bw_d, bw_u = self.cap.snapshot(t)
+        if self.planner.is_caesar and self.cfg.ragged:
+            # planning inside the producer is what makes the TIER-shaped
+            # gather possible; without that payoff (masked mode) the plan
+            # stays on the main thread — its (tiny) jitted math would only
+            # contend with the in-flight device step
+            plan = self.planner.plan(t, parts, mu, bw_d, bw_u)
+            self.planner.advance(t, parts)
+            tiers = self._tiers_from_idx(idx, plan[2], plan[3], bufs)
+            return RoundPkg(parts, mu, bw_d, bw_u, plan=plan, tiers=tiers)
+        if "cap" not in bufs:
+            bufs["cap"] = self._alloc_batch_buffers(self.n_part)
+        xs, ys = self._gather_cap(idx, bufs["cap"])
+        return RoundPkg(parts, mu, bw_d, bw_u, xs=xs, ys=ys)
+
+    def _init_global(self):
+        """Fresh [n_params] f32 global vector — the step donates it, so
+        `flat0` itself must stay intact. The client-local rows live in the
+        ClientStateStore pool (`_make_store`), not here."""
+        if self.mesh is None:
+            return jnp.array(self.flat0, copy=True)
+        return MESH.host_local_array(self.mesh, P(),
+                                     np.asarray(self.flat0).copy())
+
+    # ------------------------------------------------------------------
+    def run(self, log: Callable[[str], None] = lambda s: None) -> History:
+        cfg = self.cfg
+        ccfg = cfg.caesar
+        b_max, tau = ccfg.b_max, ccfg.tau
+        q_bits = float(self.model_bits)
+        hist = History()
+        global_f = self._init_global()
+        store = self.store = self._make_store()
+        cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
+        # double-buffered producer: one worker prefetches round t+1's
+        # package (participants, plan, tier- or cap-shaped batches — pure
+        # numpy + tiny jitted plan math) into the OFF buffer slot while the
+        # device runs round t from the other — two persistent slots, filled
+        # in place, so steady state allocates nothing
+        pool = (ThreadPoolExecutor(max_workers=1) if cfg.pipelined
+                else None)
+        n_bufs = 2 if pool else 1
+        bufs = [dict() for _ in range(n_bufs)]
+
+        def prefetch(t):
+            return self._prefetch_pkg(t, bufs[t % n_bufs])
+
+        try:
+            pending = pool.submit(prefetch, 1) if pool else None
+            for t in range(1, cfg.rounds + 1):
+                wall0 = time.perf_counter()
+                if pool:
+                    pkg = pending.result()
+                    if t < cfg.rounds:
+                        pending = pool.submit(prefetch, t + 1)
+                else:
+                    pkg = prefetch(t)
+                parts = pkg.parts
+                mu, bw_d, bw_u = pkg.mu, pkg.bw_d, pkg.bw_u
+                lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
+
+                if pkg.plan is not None:
+                    theta_d, theta_u, batch, taus = pkg.plan
+                else:
+                    theta_d, theta_u, batch, taus = self.planner.plan(
+                        t, parts, mu, bw_d, bw_u)
+                    # participation records advance right after planning
+                    # (masked caesar; the worker never touches the planner
+                    # on this path, so main-thread ordering is the only
+                    # ordering)
+                    self.planner.advance(t, parts)
+                td32 = np.asarray(theta_d, np.float32)
+                tu32 = np.asarray(theta_u, np.float32)
+                if cfg.ragged:
+                    tiers = (pkg.tiers if pkg.tiers is not None else
+                             self._tiers_from_cap(pkg.xs, pkg.ys, batch,
+                                                  taus))
+                    (global_f, down_bits, up_bits,
+                     gnorms) = self.executor.step_ragged(
+                        global_f, store, parts, tiers, lr, td32, tu32, t=t)
+                else:
+                    ws, ims = self._batch_masks(batch, taus, b_max, tau)
+                    (global_f, down_bits, up_bits,
+                     gnorms) = self.executor.step(
+                        global_f, store, parts, pkg.xs, pkg.ys,
+                        ws, ims, lr, td32, tu32, t=t)
+                self.planner.observe(t, parts, gnorms)
+
+                # --- accounting ---
+                # traffic: actual hybrid/top-k payload bits on the wire
+                down_b = np.asarray(down_bits, np.float64)
+                up_b = np.asarray(up_bits, np.float64)
+                cum_bits += float(down_b.sum() + up_b.sum())
+                # time + barrier waiting: the Eq.-7 θ·Q/β model — the SAME
+                # model optimize_batch_sizes equalizes (core/batchsize.py),
+                # evaluated at the PLANNED (b_i, τ_i) — tier quantization
+                # is an executor-shape concern, invisible to simulated time
+                times = np.asarray(BS.round_times(
+                    np.asarray(theta_d, np.float64),
+                    np.asarray(theta_u, np.float64), q_bits,
+                    bw_d[parts], bw_u[parts],
+                    np.asarray(taus, np.float64),
+                    np.asarray(batch, np.float64), mu[parts]))
+                cum_time += float(times.max())
+                waiting = float(np.mean(times.max() - times))
+                waiting_sum += waiting
+                hist.waiting_per_round.append(waiting)
+                # the np.asarray conversions above synced on the step
+                # outputs, so this is an honest per-round host wall-clock
+                hist.wall_per_round.append(time.perf_counter() - wall0)
+                if t == 1:
+                    hist.compile_s = hist.wall_per_round[0]
+
+                if t % cfg.eval_every == 0 or t == cfg.rounds:
+                    ne = min(cfg.eval_samples, len(self.data.y_test))
+                    acc = float(self._eval(global_f,
+                                           jnp.asarray(self.data.x_test[:ne]),
+                                           jnp.asarray(self.data.y_test[:ne])))
+                    hist.rounds.append(t)
+                    hist.sim_time.append(cum_time)
+                    hist.traffic_bits.append(cum_bits)
+                    hist.accuracy.append(acc)
+                    hist.waiting.append(waiting_sum / t)
+                    # warm mean: round 1 carries the jit compile
+                    # (hist.compile_s); until a warm sample exists, fall
+                    # back to the cold one
+                    warm = hist.wall_per_round[1:] or hist.wall_per_round
+                    hist.wall.append(float(np.mean(warm)))
+                    log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} "
+                        f"acc={acc:.4f} time={cum_time:,.0f}s "
+                        f"traffic={cum_bits/8e9:.3f}GB "
+                        f"wait={waiting_sum / t:.1f}s")
+                    if (cfg.target_accuracy is not None
+                            and acc >= cfg.target_accuracy):
+                        break
+        finally:
+            if pool:
+                pool.shutdown(wait=False, cancel_futures=True)
+        self.global_flat = global_f          # expose final flat model
+        self.ef_flat = store.ef_pool         # [capacity, ef_width] residuals
+        return hist
+
+    def reset(self):
+        """Reset round/planner state so `run` can be repeated on the SAME
+        simulator: the replay consumes identical seed streams against warm
+        jit caches (`run` builds a fresh state pool each call). The ragged
+        engine compiles tier shapes lazily as rounds first occupy them, so
+        a cold run folds shape compiles into mid-run walls; a reset+rerun
+        measures the steady state (every executor cache intact, no
+        model/plan state carried over)."""
+        self.planner = RoundPlanner(self.cfg, self.volumes, self.label_dist,
+                                    self.model_bits, self.policy)
+
+    # ------------------------------------------------------------------
+    def global_params(self) -> Any:
+        """Final global model as a pytree (unflatten only at the boundary)."""
+        flat = getattr(self, "global_flat", self.flat0)
+        return C.unflatten_vector(flat, self.spec)

@@ -1,0 +1,91 @@
+"""Planning layer of the Track-A round engine (DESIGN.md §1, §9).
+
+`RoundPlanner` maps (round, participant set N^t, capability snapshot) to
+per-participant (θ_d, θ_u, batch, τ) arrays — Caesar's Algorithm-1
+planning plus the baseline-policy seam. Split out of the old
+fl/simulation.py monolith; the class is unchanged. The driver
+(fl/driver.py) owns when planning happens (worker-thread prefetch vs main
+loop) and the executor (fl/executor.py) owns how plans execute.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caesar as CA
+
+
+class RoundPlanner:
+    """Maps (round, participant set N^t, capability snapshot) to
+    per-participant (θ_d, θ_u, batch, τ) arrays.
+
+    Caesar plans are **participant-scoped** (Algorithm 1 lines 8–10 run over
+    N^t): the Eq. 8–9 leader is the fastest participant and the §4.1
+    staleness clusters are built over participants. ``plan_scope="all"``
+    plans over every device instead (the leader may then be a device that is
+    not even in the round) — kept only to A/B-measure the scoping itself;
+    the other planner fixes (δ=t clamp, histogram-edge quantiles) apply in
+    both scopes. Baseline policies receive a ctx that is already
+    participant-scoped.
+
+    Caesar's planner state transition (`advance`) depends only on WHICH
+    devices participated, never on the execution outputs, so the driver
+    runs plan→advance inside the (possibly worker-thread) prefetch path in
+    round order; `observe` keeps only the execution feedback (gradient
+    norms, consumed by PyramidFL's ranking).
+    """
+
+    def __init__(self, cfg, volumes, label_dist, model_bits, policy):
+        scope = cfg.caesar.plan_scope
+        if scope not in ("participants", "all"):
+            raise ValueError(f"unknown plan_scope {scope!r}; "
+                             "want 'participants' or 'all'")
+        self.cfg = cfg
+        self.model_bits = model_bits
+        self.is_caesar = cfg.scheme == "caesar"
+        self.policy = policy
+        self.caesar_state = CA.init_state(jnp.asarray(volumes, jnp.float32),
+                                          jnp.asarray(label_dist), cfg.caesar)
+        self.grad_norms = np.zeros(cfg.n_clients)   # for PyramidFL ranking
+
+    def _participant_mask(self, parts: np.ndarray) -> np.ndarray:
+        mask = np.zeros(self.cfg.n_clients, bool)
+        mask[parts] = True
+        return mask
+
+    def plan(self, t: int, parts: np.ndarray, mu, bw_d, bw_u):
+        """Per-participant (theta_d, theta_u, batch, taus) np arrays [P]."""
+        cfg = self.cfg
+        if self.is_caesar:
+            ccfg = cfg.caesar
+            mask = (jnp.asarray(self._participant_mask(parts))
+                    if ccfg.plan_scope == "participants" else None)
+            plan = CA.plan_round_jit(self.caesar_state, jnp.int32(t), ccfg,
+                                     jnp.asarray(bw_d, jnp.float32),
+                                     jnp.asarray(bw_u, jnp.float32),
+                                     jnp.asarray(mu, jnp.float32),
+                                     float(self.model_bits), mask)
+            return (np.asarray(plan.theta_d)[parts],
+                    np.asarray(plan.theta_u)[parts],
+                    np.asarray(plan.batch)[parts],
+                    np.full(len(parts), ccfg.tau, np.int32))
+        ctx = {"n": len(parts), "t": t, "total_rounds": cfg.rounds,
+               "mu": mu[parts], "bw_d": bw_d[parts], "bw_u": bw_u[parts],
+               "b_max": cfg.caesar.b_max, "tau": cfg.caesar.tau,
+               "grad_norms": self.grad_norms[parts]}
+        p = self.policy.plan(ctx)
+        return p.theta_d, p.theta_u, p.batch, p.local_iters
+
+    def advance(self, t: int, parts: np.ndarray):
+        """Caesar participation-record transition (Algorithm 1 line 14).
+        Exactly one caller owns it per mode — the prefetch path in round
+        order (ragged: the worker thread plans), or the main loop right
+        after planning (masked) — so ``caesar_state`` is race-free."""
+        if self.is_caesar:
+            self.caesar_state = CA.post_round_jit(
+                self.caesar_state, jnp.asarray(self._participant_mask(parts)),
+                jnp.int32(t))
+
+    def observe(self, t: int, parts: np.ndarray, gnorms: np.ndarray):
+        """Post-aggregation execution feedback (PyramidFL grad norms)."""
+        self.grad_norms[parts] = gnorms

@@ -6,1308 +6,47 @@ Eq.-9 batch size, importance-ranked upload top-k, synchronous aggregation.
 Wall-clock and traffic are accounted through the calibrated capability model
 (Eq. 7).
 
-The simulator is a **layered round engine** (DESIGN.md §1, §7, §8):
+This module is the stable public surface of the **layered round engine**
+(DESIGN.md §1, §7–§9), a facade over four sibling modules:
 
-* **Planning layer** (`RoundPlanner`) — participant-scoped: the Eq. 8–9
-  batch-size leader is chosen from the round's participant set N^t and the
-  §4.1 staleness clusters are built over N^t (``CaesarConfig.plan_scope``
-  keeps the all-device variant for A/B measurement). Baseline policies
-  (fl/baselines.py) plug in at the same seam. Caesar's planner state
-  transition depends only on the participant sets, so Caesar rounds are
-  planned inside the prefetch path (`RoundPlanner.advance`).
-* **Execution layer** (`RoundExecutor`) — the flat-parameter engine: the
-  global model is ONE [n_params] f32 vector, all client-local models live in
-  a single [n_clients, n_params] buffer (optionally stored bfloat16 —
-  ``SimConfig.buffer_dtype`` — with f32 compute via gather-upcast /
-  scatter-downcast), and download-compress → recover → τ-step scan →
-  upload-top-k → aggregate → scatter runs with donated buffers. Two
-  execution shapes share the same per-participant math:
+* `repro.fl.state` — `ClientStateStore`: the participation-keyed client
+  row pool (grow-on-demand / dense / capped-with-eviction, staleness-tier
+  centroids, host/memmap offload, bf16 storage) that replaced the dense
+  [n_clients, n_params] local buffer — resident state scales with the
+  active cohort, not the registered population.
+* `repro.fl.planner` — `RoundPlanner`: participant-scoped Eq. 8–9 /
+  §4.1 planning plus the baseline-policy seam.
+* `repro.fl.executor` — `RoundExecutor`: the fused flat-parameter round
+  step over pool slots — masked ([τ, b_max] cap) and ragged (quantized
+  (b, τ) tier lattice) shapes, chunked lax.scan, donated buffers,
+  optional "data"-mesh sharding, EF residual carry, stochastic-rounding
+  bf16 scatter.
+* `repro.fl.driver` — `SimConfig`, `History`, `RoundPkg`, `Simulator`:
+  the pipelined double-buffered round loop, per-round SeedSequence RNG
+  streams, Eq.-7 time/waiting + payload-faithful traffic accounting.
 
-  - the **masked** engine (``SimConfig.ragged=False``) runs every
-    participant at the ``[τ, b_max]`` cap in ONE jitted step, realizing the
-    planned (b_i, τ_i) as zero-weight sample masks — fixed shapes, but the
-    whole FLOP gap between the cap and the plan is spent on padded zeros;
-  - the **ragged** engine (default) quantizes each planned (b_i, τ_i) UP to
-    a small power-of-two tier lattice (``core.batchsize.quantize_plan``),
-    groups participants by tier host-side, and runs one jitted chunk step
-    per occupied ``[chunk_rung, τ_tier, b_tier]`` shape — compiled once per
-    shape and cached across rounds (the jit cache is bounded by the tier
-    lattice × the chunk-rung ladder, never by the round count), doing
-    ~Σ τ_i·b_i work instead of P·τ·b_max.
-
-  Participants are processed in fixed-size **chunks** so the [P, n_params]
-  intermediates are bounded by ``chunk_size × n_params``; ``chunk_size=
-  None`` auto-tunes the chunk from the model size, a host working-set
-  budget, and the EF carry width (``core.compression.auto_chunk``). The
-  optional **sharded** mode places the buffers' rows and the participant
-  chunks across the "data" mesh (launch/mesh.py — all addressable devices,
-  spanning hosts after ``launch.mesh.init_distributed`` when
-  ``SimConfig.multi_host``); upload sums cross shards via psum (masked) or
-  a sharded per-shard accumulator reduced at finalize (ragged).
-* **Pipelined driver** (`Simulator.run`) — host producer work for round
-  t+1 runs on a worker thread while the device executes round t. Every
-  round draws from its own ``np.random.SeedSequence(seed, spawn_key=(2,
-  t))`` stream and the batch-index draw is always cap-shaped
-  (plan-independent), so the pipelined and synchronous
-  (``SimConfig.pipelined=False``) loops consume identical randomness and
-  are same-seed identical. Under the ragged engine the worker additionally
-  plans the Caesar round and gathers the training batches at TIER shapes —
-  a per-participant ``[:τ_tier, :b_tier]`` prefix of the capped index draw
-  — cutting host sampling bytes by the same plan-shaped factor as the
-  device FLOPs. Baseline policies that plan from execution feedback
-  (PyramidFL's gradient-norm ranking) keep the cap-shaped worker gather
-  and slice tier prefixes on the main thread instead.
-
-Thresholds come from the O(n) histogram operators (``core.compression.
-fused_*``) behind a backend switch resolved once per simulation (§3–4).
-
-Accounting keeps ONE rate model end to end: simulated round time and
-barrier waiting use the Eq.-7 θ·Q/β model the Eq. 8–9 planner equalizes
-(core/batchsize.py) — always against the PLANNED (b_i, τ_i), tier
-quantization is an executor concern and never leaks into the time model —
-while traffic is accounted with the actual hybrid / top-k payload bits.
+Import from HERE (``from repro.fl.simulation import Simulator, SimConfig``)
+— every name below is re-exported unchanged, so the decomposition is
+invisible to callers of the old 1300-line monolith.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-import warnings
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro.core import batchsize as BS
-from repro.core import caesar as CA
-from repro.core import compression as C
-from repro.data import partition, synthetic
-from repro.fl import baselines as BL
-from repro.fl.capability import CapabilityModel
-from repro.launch import mesh as MESH
-from repro.models import paper_models as PM
-from repro.optim import sgd as SGD
-
-BUFFER_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
-# extra f32 [chunk, n_params] arrays the EF carry keeps live in the round
-# step (gathered residual rows + recomputed residuals) — auto_chunk input
-EF_EXTRA_ARRAYS = 2.0
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    dataset: str = "cifar10"
-    model: Optional[str] = None          # default: paper pairing
-    scheme: str = "caesar"               # caesar | fedavg | fic | cac | flexcom | prowd | pyramidfl
-    n_clients: int = 100
-    participation: float = 0.1
-    rounds: int = 100
-    p_heterogeneity: float = 5.0         # paper's p = 1/δ (default 5)
-    data_scale: float = 0.05             # dataset size multiplier (CPU budget)
-    eval_every: int = 5
-    eval_samples: int = 1000
-    seed: int = 0
-    caesar: CA.CaesarConfig = dataclasses.field(default_factory=CA.CaesarConfig)
-    sgd: SGD.SGDConfig = dataclasses.field(default_factory=SGD.SGDConfig)
-    target_accuracy: Optional[float] = None
-    # compression-operator backend: auto | pallas | interpret | jnp
-    backend: str = "auto"
-    # execution layer (DESIGN.md §7): participants per chunk. None ⇒
-    # auto-tuned from n_params, the cohort, chunk_budget_mb and the EF carry
-    # (core.compression.auto_chunk); 0 ⇒ one chunk of all participants (the
-    # PR-1 single-vmap engine); an int bounds the per-round [P, n_params]
-    # working set at chunk_size × n_params.
-    chunk_size: Optional[int] = None
-    # host working-set budget (MB) the auto-tuned chunk targets; ignored
-    # when chunk_size is given explicitly.
-    chunk_budget_mb: float = 1024.0
-    # overlap host batch sampling for round t+1 with the device step for
-    # round t (worker thread; same-seed identical to the synchronous loop —
-    # every round owns a SeedSequence-derived RNG stream either way).
-    pipelined: bool = True
-    # plan-shaped ragged execution (DESIGN.md §8): run each participant at
-    # its quantized (b, τ) tier shape instead of the [τ, b_max] cap with
-    # zero-weight masks. False keeps the uniform-cap masked engine — the
-    # parity baseline for the ragged-vs-masked CI gate.
-    ragged: bool = True
-    # storage dtype of the [n_clients, n_params] local buffer — the only
-    # RSS term that grows with cohort size. "bfloat16" halves it; compute
-    # stays f32 (gather upcasts, scatter downcasts), so this is a
-    # memory/accuracy trade, NOT same-seed identical to f32.
-    buffer_dtype: str = "float32"
-    # shard the [n_clients, n_params] local buffer + participant chunks over
-    # the "data" mesh (DESIGN.md §7). Requires n_clients divisible by the
-    # device count; participants are drawn stratified per shard so every
-    # device owns its participants' buffer rows.
-    sharded: bool = False
-    # initialize jax.distributed and build the "data" mesh over every
-    # host's devices (process-local buffer rows, psum unchanged). Requires
-    # sharded=True; a no-op single-process falls back to the local mesh.
-    multi_host: bool = False
-    # preliminary-study variants (Fig. 1): compress only one direction
-    fic_down_only: bool = False
-    fic_up_only: bool = False
-    # synthetic-task difficulty overrides (e.g. {"sep": 2.0, "noise": 1.0})
-    dataset_kwargs: Optional[dict] = None
-
-
-@dataclasses.dataclass
-class History:
-    """Eval-aligned series: every list below has one entry per eval round
-    (``rounds[i]`` is the round number of entry i). ``waiting`` is a RUNNING
-    MEAN over all rounds simulated so far; ``wall`` is the running WARM mean
-    — round 1 (which folds the one-time XLA compile into its wall time) is
-    excluded and reported separately as ``compile_s``. Per-round raw samples
-    (round 1 included) live in the ``*_per_round`` lists. Under the ragged
-    engine, later rounds that first touch a new tier shape also pay a
-    one-time compile inside their wall sample — medians, not means, are the
-    robust per-round statistic."""
-    rounds: list = dataclasses.field(default_factory=list)
-    sim_time: list = dataclasses.field(default_factory=list)      # cumulative s
-    traffic_bits: list = dataclasses.field(default_factory=list)  # cumulative
-    accuracy: list = dataclasses.field(default_factory=list)
-    waiting: list = dataclasses.field(default_factory=list)       # running mean s
-    wall: list = dataclasses.field(default_factory=list)          # warm mean s
-    waiting_per_round: list = dataclasses.field(default_factory=list)
-    wall_per_round: list = dataclasses.field(default_factory=list)
-    compile_s: float = 0.0     # round-1 wall (jit compile + first dispatch)
-
-    def summary(self) -> dict:
-        return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
-                "total_time_s": self.sim_time[-1] if self.sim_time else 0.0,
-                "total_traffic_gb": (self.traffic_bits[-1] / 8e9
-                                     if self.traffic_bits else 0.0)}
-
-    def to_target(self, acc: float):
-        """(time_s, traffic_gb, round) when ``acc`` first reached, else None."""
-        for r, t, tr, a in zip(self.rounds, self.sim_time, self.traffic_bits,
-                               self.accuracy):
-            if a >= acc:
-                return t, tr / 8e9, r
-        return None
-
-
-@dataclasses.dataclass
-class TierGroup:
-    """One occupied (b, τ) execution tier of a round (DESIGN.md §8).
-
-    ``pos`` are positions into the round's ``parts`` array (processing
-    order); the batch arrays hold ``g_pad = tier_layout(len(pos))[0]`` rows
-    — tail rows beyond ``len(pos)`` are zero-filled padding that the
-    executor masks out (zero weight, out-of-range scatter index)."""
-    b: int
-    tau: int
-    pos: np.ndarray           # [g] positions into parts
-    g_pad: int
-    slices: list              # [(start, chunk_rung)] from tier_layout
-    xs: np.ndarray            # [g_pad, tau, b, ...feat]
-    ys: np.ndarray            # [g_pad, tau, b]
-    ws: np.ndarray            # [g_pad, tau, b] sample weights
-    ims: np.ndarray           # [g_pad, tau] iteration masks
-
-
-@dataclasses.dataclass
-class RoundPkg:
-    """Everything the driver needs to execute one round, produced by the
-    prefetch path (worker thread when pipelined). ``plan`` and ``tiers``
-    are filled for Caesar (whose planner is execution-independent);
-    baseline policies plan on the main thread from ``xs``/``ys``."""
-    parts: np.ndarray
-    mu: np.ndarray
-    bw_d: np.ndarray
-    bw_u: np.ndarray
-    plan: Optional[tuple] = None      # (theta_d, theta_u, batch, taus) [P]
-    xs: Optional[np.ndarray] = None   # cap-shaped [P, τ, b_max, ...]
-    ys: Optional[np.ndarray] = None
-    tiers: Optional[list] = None      # list[TierGroup]
-
-
-# ---------------------------------------------------------------------------
-# Planning layer
-# ---------------------------------------------------------------------------
-
-class RoundPlanner:
-    """Maps (round, participant set N^t, capability snapshot) to
-    per-participant (θ_d, θ_u, batch, τ) arrays.
-
-    Caesar plans are **participant-scoped** (Algorithm 1 lines 8–10 run over
-    N^t): the Eq. 8–9 leader is the fastest participant and the §4.1
-    staleness clusters are built over participants. ``plan_scope="all"``
-    plans over every device instead (the leader may then be a device that is
-    not even in the round) — kept only to A/B-measure the scoping itself;
-    the other planner fixes (δ=t clamp, histogram-edge quantiles) apply in
-    both scopes. Baseline policies receive a ctx that is already
-    participant-scoped.
-
-    Caesar's planner state transition (`advance`) depends only on WHICH
-    devices participated, never on the execution outputs, so the driver
-    runs plan→advance inside the (possibly worker-thread) prefetch path in
-    round order; `observe` keeps only the execution feedback (gradient
-    norms, consumed by PyramidFL's ranking).
-    """
-
-    def __init__(self, cfg: SimConfig, volumes, label_dist, model_bits,
-                 policy):
-        scope = cfg.caesar.plan_scope
-        if scope not in ("participants", "all"):
-            raise ValueError(f"unknown plan_scope {scope!r}; "
-                             "want 'participants' or 'all'")
-        self.cfg = cfg
-        self.model_bits = model_bits
-        self.is_caesar = cfg.scheme == "caesar"
-        self.policy = policy
-        self.caesar_state = CA.init_state(jnp.asarray(volumes, jnp.float32),
-                                          jnp.asarray(label_dist), cfg.caesar)
-        self.grad_norms = np.zeros(cfg.n_clients)   # for PyramidFL ranking
-
-    def _participant_mask(self, parts: np.ndarray) -> np.ndarray:
-        mask = np.zeros(self.cfg.n_clients, bool)
-        mask[parts] = True
-        return mask
-
-    def plan(self, t: int, parts: np.ndarray, mu, bw_d, bw_u):
-        """Per-participant (theta_d, theta_u, batch, taus) np arrays [P]."""
-        cfg = self.cfg
-        if self.is_caesar:
-            ccfg = cfg.caesar
-            mask = (jnp.asarray(self._participant_mask(parts))
-                    if ccfg.plan_scope == "participants" else None)
-            plan = CA.plan_round_jit(self.caesar_state, jnp.int32(t), ccfg,
-                                     jnp.asarray(bw_d, jnp.float32),
-                                     jnp.asarray(bw_u, jnp.float32),
-                                     jnp.asarray(mu, jnp.float32),
-                                     float(self.model_bits), mask)
-            return (np.asarray(plan.theta_d)[parts],
-                    np.asarray(plan.theta_u)[parts],
-                    np.asarray(plan.batch)[parts],
-                    np.full(len(parts), ccfg.tau, np.int32))
-        ctx = {"n": len(parts), "t": t, "total_rounds": cfg.rounds,
-               "mu": mu[parts], "bw_d": bw_d[parts], "bw_u": bw_u[parts],
-               "b_max": cfg.caesar.b_max, "tau": cfg.caesar.tau,
-               "grad_norms": self.grad_norms[parts]}
-        p = self.policy.plan(ctx)
-        return p.theta_d, p.theta_u, p.batch, p.local_iters
-
-    def advance(self, t: int, parts: np.ndarray):
-        """Caesar participation-record transition (Algorithm 1 line 14).
-        Exactly one caller owns it per mode — the prefetch path in round
-        order (ragged: the worker thread plans), or the main loop right
-        after planning (masked) — so ``caesar_state`` is race-free."""
-        if self.is_caesar:
-            self.caesar_state = CA.post_round_jit(
-                self.caesar_state, jnp.asarray(self._participant_mask(parts)),
-                jnp.int32(t))
-
-    def observe(self, t: int, parts: np.ndarray, gnorms: np.ndarray):
-        """Post-aggregation execution feedback (PyramidFL grad norms)."""
-        self.grad_norms[parts] = gnorms
-
-
-# ---------------------------------------------------------------------------
-# Execution layer
-# ---------------------------------------------------------------------------
-
-class RoundExecutor:
-    """The fused flat-parameter round step: chunked, plan-shaped (ragged)
-    or uniform-cap (masked), optionally sharded.
-
-    **Masked** (``cfg.ragged=False``): one jitted step per simulation
-    (donated [n_params] global vector + [n_clients, n_params] local buffer
-    + EF buffer). Internally a lax.scan over fixed-size participant chunks
-    carries (local buffer, EF buffer, upload-sum): each chunk gathers its
-    rows, runs the vmapped per-participant round at the [τ, b_max] cap,
-    masks its upload contribution into the accumulator and scatters its
-    rows back — so only [chunk, n_params] intermediates are ever live.
-
-    **Ragged** (default, DESIGN.md §8): the host groups participants by
-    quantized (b, τ) tier and `step_ragged` runs a python loop of jitted
-    **tier-chunk steps** — the same per-participant math at the tier's
-    ``[chunk_rung, τ_tier, b_tier]`` shape, threading the donated (local
-    buffer, EF buffer, upload accumulator) through every call, so the
-    total is a left-fold over the processing order exactly like the masked
-    scan. jax.jit caches one executable per distinct shape; shapes are
-    drawn from the tier lattice × a power-of-two chunk-rung ladder
-    (`tier_layout`), so the cache is bounded by ``shape_lattice_bound()``
-    regardless of round count (tier-occupancy/recompile telemetry via
-    `telemetry()`). Residual padding inside a tier keeps the masked
-    engine's zero-weight semantics, so ragged-vs-masked same-seed
-    trajectories agree to float-reduction noise (measured ~6e-8/step on
-    CPU — reduction order over the padded batch differs; gated at the
-    chunked-parity tolerances, see DESIGN.md §8).
-
-    ``chunk_size=None`` resolves the chunk via `core.compression.
-    auto_chunk` against ``chunk_budget_mb``, counting the EF carry
-    (``EF_EXTRA_ARRAYS`` per-chunk f32 arrays) when error feedback is on.
-    In sharded mode the masked scan runs inside a shard_map over the 1-D
-    "data" mesh (upload sums cross shards with a psum) and the ragged
-    tier-chunk step runs shard_mapped with per-shard tier groups padded to
-    a common rung (per-shard partial upload sums, reduced at finalize). On
-    a multi-process (multi-host) mesh the grouped inputs are assembled per
-    process (`launch.mesh.host_local_array`) and the per-participant
-    outputs allgathered (`launch.mesh.fetch_global`); the device math is
-    identical.
-
-    The error-feedback residual (``CaesarConfig.use_error_feedback``) rides
-    the same machinery: a [n_clients, ef_width] buffer whose rows are
-    gathered/scattered alongside the local models, ``ef_width = n_params``
-    when EF is on and 0 when off — the disabled path carries a zero-width
-    buffer, so there is no silent no-op and the residual adds no cost
-    unless enabled. The local buffer may be stored ``bfloat16``
-    (``SimConfig.buffer_dtype``): gathers upcast to f32 for compute,
-    scatters downcast — for f32 the casts are identities.
-    """
-
-    def __init__(self, cfg: SimConfig, apply_fn, spec: C.FlatSpec,
-                 backend: str, quantize: bool, n_part: int, mesh=None,
-                 use_ef: bool = False):
-        self.cfg = cfg
-        self.apply_fn = apply_fn
-        self.spec = spec
-        self.backend = backend
-        self.quantize = quantize
-        self.use_ef = use_ef
-        self.ef_width = spec.n_params if use_ef else 0
-        self.mesh = mesh
-        self.n_clients = cfg.n_clients
-        if cfg.buffer_dtype not in BUFFER_DTYPES:
-            raise ValueError(f"unknown buffer_dtype {cfg.buffer_dtype!r}; "
-                             f"want one of {tuple(BUFFER_DTYPES)}")
-        self.buf_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
-        self.n_dev = mesh.shape["data"] if mesh is not None else 1
-        if n_part % self.n_dev:
-            raise ValueError(f"participants ({n_part}) must divide evenly "
-                             f"over {self.n_dev} shards")
-        self.rows_per_shard = self.n_clients // self.n_dev
-        self.p_shard = n_part // self.n_dev
-        chunk_size = cfg.chunk_size
-        if chunk_size is None:
-            chunk_size = C.auto_chunk(
-                spec.n_params, self.p_shard, cfg.chunk_budget_mb,
-                extra_arrays=EF_EXTRA_ARRAYS if use_ef else 0.0)
-        self.chunk, self.p_pad, self.n_chunks = C.chunk_layout(
-            self.p_shard, chunk_size)
-        self.b_cap, self.tau_cap = cfg.caesar.b_max, cfg.caesar.tau
-        self.b_min = cfg.caesar.b_min
-        # ragged telemetry: cumulative per-tier participant counts, the set
-        # of tier-chunk shapes traced (≅ jit-cache entries), plan-shaped vs
-        # cap work in participant·iteration·sample units
-        self.tier_occupancy: dict = {}
-        self._shapes_seen: set = set()
-        self.work_ragged = 0
-        self.work_cap = 0
-        self._build()
-
-    # -- tier shape lattice -------------------------------------------------
-
-    def chunk_rungs(self) -> list:
-        """The static chunk-size ladder: {chunk} ∪ {powers of two < chunk}.
-        Every tier-chunk call uses a rung, so the jit cache stays bounded."""
-        rungs = {self.chunk}
-        r = 1
-        while r < self.chunk:
-            rungs.add(r)
-            r <<= 1
-        return sorted(rungs)
-
-    def tier_layout(self, g: int) -> tuple[int, list]:
-        """Chunk-rung decomposition of a tier group of ``g`` participants:
-        ⌊g/chunk⌋ full chunks plus a power-of-two tail rung covering the
-        remainder (padding < remainder). Returns (g_pad, [(start, rung)])."""
-        if g <= 0:
-            raise ValueError(f"tier group must be non-empty, got {g}")
-        k, r = divmod(g, self.chunk)
-        slices = [(i * self.chunk, self.chunk) for i in range(k)]
-        g_pad = k * self.chunk
-        if r:
-            rung = min(1 << (r - 1).bit_length(), self.chunk)
-            slices.append((g_pad, rung))
-            g_pad += rung
-        return g_pad, slices
-
-    def shape_lattice_bound(self) -> int:
-        """Upper bound on distinct compiled tier-chunk shapes: the (b, τ)
-        tier lattice × the chunk-rung ladder."""
-        return (BS.tier_lattice_size(self.b_min, self.b_cap, self.tau_cap)
-                * len(self.chunk_rungs()))
-
-    def telemetry(self) -> dict:
-        occ = {f"b{b}xt{t}": int(n)
-               for (b, t), n in sorted(self.tier_occupancy.items())}
-        return {"tier_occupancy": occ,
-                "compiled_tier_shapes": len(self._shapes_seen),
-                "shape_lattice_bound": self.shape_lattice_bound(),
-                "work_fraction": (self.work_ragged / self.work_cap
-                                  if self.work_cap else 1.0)}
-
-    # -- jit construction ---------------------------------------------------
-    def _make_participant_round(self):
-        """The per-participant round math, shared verbatim by the masked
-        and ragged engines — shape-polymorphic in (τ, b)."""
-        cfg = self.cfg
-        apply_fn = self.apply_fn
-        spec = self.spec
-        backend = self.backend
-        n_params = spec.n_params
-        # scheme-level switches are fixed for the simulation → Python-level
-        # branches, not lax.cond: the compiled step contains only one path.
-        use_recovery = cfg.scheme == "caesar"
-        quantize = self.quantize
-        use_ef = self.use_ef
-
-        def ce_loss(params, x, y, w):
-            logits = apply_fn(params, x)
-            logp = jax.nn.log_softmax(logits)
-            ll = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
-            return -jnp.sum(ll * w) / jnp.maximum(jnp.sum(w), 1.0)
-
-        def local_train(params, xs, ys, ws, iter_mask, lr):
-            """τ masked SGD steps. xs [τ,b,...]; ws [τ,b]; iter_mask [τ]."""
-            def step(p, inp):
-                x, y, w, m = inp
-                g = jax.grad(ce_loss)(p, x, y, w)
-                newp = jax.tree.map(lambda a, b_: a - lr * m * b_, p, g)
-                return newp, None
-            out, _ = jax.lax.scan(step, params, (xs, ys, ws, iter_mask))
-            return out
-
-        def participant_round(global_f, g_cdf, g_max, local_f, ef_row, xs,
-                              ys, ws, iter_mask, lr, theta_d, theta_u):
-            """One participant, entirely on flat [n_params] vectors."""
-            # --- download: per-device threshold is an O(1) lookup in the
-            # shared global-model cdf (one histogram per ROUND, not per device)
-            thr_d = C.threshold_from_cdf(g_cdf, g_max, theta_d)
-            kept, sign, cnt, ssum, smax = C.fused_compress(global_f, thr_d,
-                                                           backend)
-            mean_abs = ssum / jnp.maximum(cnt, 1)
-            # wire-format convention (kernels/ref.py): sign==0 marks a
-            # full-precision slot. An exact-zero compressed weight therefore
-            # arrives as its true value 0 (not the stale local) — a
-            # zero-deviation difference from the pytree engine's mask form.
-            if use_recovery:
-                w_init = C.fused_recover(kept, sign, local_f, mean_abs, smax,
-                                         backend)
-            else:   # plain stale substitution on the compressed slots
-                w_init = jnp.where(sign != 0, local_f, kept)
-            down_bits = C.hybrid_payload_bits(n_params, cnt)
-            # --- local training (pytree exists only inside apply_fn)
-            w_fin = local_train(C.unflatten_vector(w_init, spec),
-                                xs, ys, ws, iter_mask, lr)
-            flat_fin = C.flatten_vector(w_fin, spec)
-            delta = w_init - flat_fin
-            gnorm = jnp.linalg.norm(delta)
-            # --- upload (EF: compress the residual-corrected delta, stash
-            # what the compressor dropped back into the participant's row)
-            target = delta + ef_row if use_ef else delta
-            thr_u = C.fused_threshold(target, theta_u, backend)
-            if quantize:   # ProWD-style: 1-bit masked elements, sign·mean
-                k2, s2, c2, ss2, mx2 = C.fused_compress(target, thr_u,
-                                                        backend)
-                up = jnp.where(s2 != 0,
-                               s2.astype(jnp.float32)
-                               * (ss2 / jnp.maximum(c2, 1)), k2)
-                up_bits = C.hybrid_payload_bits(n_params, c2)
-            else:          # top-k sparsification
-                up, up_bits = C.topk_sparsify_at(target, thr_u)
-            new_ef = target - up if use_ef else ef_row
-            return up, flat_fin, new_ef, down_bits, up_bits, gnorm
-
-        return participant_round
-
-    def _build(self):
-        participant_round = self._make_participant_round()
-        self._build_masked(participant_round)
-        self._build_ragged(participant_round)
-
-    def _build_masked(self, participant_round):
-        n_params = self.spec.n_params
-        backend = self.backend
-        chunk, n_chunks = self.chunk, self.n_chunks
-        buf_dtype = self.buf_dtype
-
-        def chunked_scan(global_f, g_cdf, g_max, buf, ef_buf, parts_l, pmask,
-                         xs, ys, ws, ims, lr, theta_d, theta_u):
-            """Scan over participant chunks; carry = (buffer, EF buffer,
-            upload-sum).
-
-            ``parts_l`` are buffer-LOCAL row indices [p_pad]; padded entries
-            carry an out-of-range index (scatter drops them, the clamped
-            gather row is masked out of the upload sum and written back
-            unchanged)."""
-            def reshape_c(a):
-                return a.reshape((n_chunks, chunk) + a.shape[1:])
-            inp = tuple(map(reshape_c, (parts_l, pmask, xs, ys, ws, ims,
-                                        theta_d, theta_u)))
-
-            def chunk_step(carry, c):
-                buf, ef_buf, up_sum = carry
-                p_c, m_c, xs_c, ys_c, ws_c, ims_c, td_c, tu_c = c
-                lp_raw = buf[p_c]                       # [chunk, n_params]
-                lp_sel = lp_raw.astype(jnp.float32)
-                ef_sel = ef_buf[p_c]                    # [chunk, ef_width]
-                ups, new_lp, new_ef, db, ub, gn = jax.vmap(
-                    participant_round,
-                    in_axes=(None, None, None, 0, 0, 0, 0, 0, 0, None, 0,
-                             0))(
-                    global_f, g_cdf, g_max, lp_sel, ef_sel, xs_c, ys_c,
-                    ws_c, ims_c, lr, td_c, tu_c)
-                up_sum = up_sum + jnp.sum(ups * m_c[:, None], axis=0)
-                buf = buf.at[p_c].set(
-                    jnp.where(m_c[:, None] > 0, new_lp,
-                              lp_sel).astype(buf_dtype))
-                ef_buf = ef_buf.at[p_c].set(
-                    jnp.where(m_c[:, None] > 0, new_ef, ef_sel))
-                return (buf, ef_buf, up_sum), (db, ub, gn)
-
-            (buf, ef_buf, up_sum), (db, ub, gn) = jax.lax.scan(
-                chunk_step, (buf, ef_buf, jnp.zeros(n_params, jnp.float32)),
-                inp)
-            return (buf, ef_buf, up_sum, db.reshape(-1), ub.reshape(-1),
-                    gn.reshape(-1))
-
-        if self.mesh is None:
-            def round_step(global_f, local_buf, ef_buf, parts, pmask, xs,
-                           ys, ws, ims, lr, theta_d, theta_u):
-                g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
-                buf, ef_buf, up_sum, db, ub, gn = chunked_scan(
-                    global_f, g_cdf, g_max, local_buf, ef_buf, parts, pmask,
-                    xs, ys, ws, ims, lr, theta_d, theta_u)
-                # aggregate (Algorithm 1 line 13) over the valid participants
-                new_global = global_f - up_sum / jnp.maximum(jnp.sum(pmask),
-                                                             1.0)
-                return new_global, buf, ef_buf, db, ub, gn
-
-            # donating the global vector and the [n, n_params] local/EF
-            # buffers lets XLA scatter the participants' rows in place
-            # instead of copying the whole buffer every round (~60ms/round
-            # at 100×164k on CPU)
-            self._round_step = jax.jit(round_step, donate_argnums=(0, 1, 2))
-            return
-
-        rows_per_shard = self.rows_per_shard
-
-        def shard_body(global_f, g_cdf, g_max, buf, ef_buf, parts, pmask,
-                       xs, ys, ws, ims, lr, theta_d, theta_u):
-            # global → shard-local buffer rows; padding (= n_clients) stays
-            # out of range for every shard
-            row0 = jax.lax.axis_index("data") * rows_per_shard
-            parts_l = parts - row0
-            buf, ef_buf, up_sum, db, ub, gn = chunked_scan(
-                global_f, g_cdf, g_max, buf, ef_buf, parts_l, pmask, xs, ys,
-                ws, ims, lr, theta_d, theta_u)
-            up_sum = jax.lax.psum(up_sum, "data")
-            cnt = jax.lax.psum(jnp.sum(pmask), "data")
-            new_global = global_f - up_sum / jnp.maximum(cnt, 1.0)
-            return new_global, buf, ef_buf, db, ub, gn
-
-        sharded = MESH.shard_map_compat(
-            shard_body, self.mesh,
-            in_specs=(P(), P(), P(), P("data", None), P("data", None),
-                      P("data"), P("data"), P("data"), P("data"), P("data"),
-                      P("data"), P(), P("data"), P("data")),
-            out_specs=(P(), P("data", None), P("data", None), P("data"),
-                       P("data"), P("data")),
-            axis_names={"data"})
-
-        def round_step_sharded(global_f, local_buf, ef_buf, parts, pmask,
-                               xs, ys, ws, ims, lr, theta_d, theta_u):
-            # one global-model histogram per round, replicated into shards
-            g_cdf, g_max = C.fused_histogram_cdf(global_f, backend)
-            return sharded(global_f, g_cdf, g_max, local_buf, ef_buf, parts,
-                           pmask, xs, ys, ws, ims, lr, theta_d, theta_u)
-
-        self._round_step = jax.jit(round_step_sharded,
-                                   donate_argnums=(0, 1, 2))
-
-    def _build_ragged(self, participant_round):
-        """The per-shape tier-chunk step (jax.jit caches one executable per
-        [chunk_rung, τ_tier, b_tier] shape), plus the shared per-round
-        histogram and the donated aggregation finalizer."""
-        backend = self.backend
-        buf_dtype = self.buf_dtype
-
-        def tier_chunk(buf, ef_buf, up_sum, global_f, g_cdf, g_max, parts_l,
-                       pmask, xs, ys, ws, ims, lr, theta_d, theta_u):
-            lp_raw = buf[parts_l]                   # [c, n_params]
-            lp_sel = lp_raw.astype(jnp.float32)
-            ef_sel = ef_buf[parts_l]                # [c, ef_width]
-            ups, new_lp, new_ef, db, ub, gn = jax.vmap(
-                participant_round,
-                in_axes=(None, None, None, 0, 0, 0, 0, 0, 0, None, 0, 0))(
-                global_f, g_cdf, g_max, lp_sel, ef_sel, xs, ys, ws, ims,
-                lr, theta_d, theta_u)
-            sel = pmask[:, None] > 0
-            up_sum = up_sum + jnp.sum(ups * pmask[:, None], axis=0)
-            buf = buf.at[parts_l].set(
-                jnp.where(sel, new_lp, lp_sel).astype(buf_dtype))
-            ef_buf = ef_buf.at[parts_l].set(jnp.where(sel, new_ef, ef_sel))
-            return buf, ef_buf, up_sum, db, ub, gn
-
-        if self.mesh is None:
-            self._tier_chunk = jax.jit(tier_chunk, donate_argnums=(0, 1, 2))
-        else:
-            rows_per_shard = self.rows_per_shard
-
-            def shard_body(buf, ef_buf, up_sum, global_f, g_cdf, g_max,
-                           parts, pmask, xs, ys, ws, ims, lr, td, tu):
-                row0 = jax.lax.axis_index("data") * rows_per_shard
-                b, e, u, db, ub, gn = tier_chunk(
-                    buf, ef_buf, up_sum[0], global_f, g_cdf, g_max,
-                    parts - row0, pmask, xs, ys, ws, ims, lr, td, tu)
-                # per-shard partial upload sums ride a [n_dev, n_params]
-                # "data"-sharded accumulator; the finalizer reduces them
-                return b, e, u[None], db, ub, gn
-
-            sm = MESH.shard_map_compat(
-                shard_body, self.mesh,
-                in_specs=(P("data", None), P("data", None), P("data", None),
-                          P(), P(), P(), P("data"), P("data"), P("data"),
-                          P("data"), P("data"), P("data"), P(), P("data"),
-                          P("data")),
-                out_specs=(P("data", None), P("data", None),
-                           P("data", None), P("data"), P("data"),
-                           P("data")),
-                axis_names={"data"})
-            self._tier_chunk = jax.jit(sm, donate_argnums=(0, 1, 2))
-
-        self._hist = jax.jit(
-            lambda g: C.fused_histogram_cdf(g, backend))
-
-        def finalize(global_f, up_sum, cnt):
-            total = up_sum if up_sum.ndim == 1 else jnp.sum(up_sum, axis=0)
-            return global_f - total / jnp.maximum(cnt, 1.0)
-
-        self._finalize = jax.jit(finalize, donate_argnums=(0,))
-
-    # -- host-side chunk/shard marshalling ----------------------------------
-    def _group(self, a: np.ndarray, order: np.ndarray, fill) -> np.ndarray:
-        """Order by shard, pad each shard's group to p_pad, flatten."""
-        d, ps, pp = self.n_dev, self.p_shard, self.p_pad
-        if d == 1 and pp == ps:
-            # identity order, no padding: skip the fancy-index copy (tens
-            # of MB per round for the batch tensors at dense cohorts)
-            return np.asarray(a)
-        a = np.asarray(a)[order].reshape((d, ps) + np.asarray(a).shape[1:])
-        if pp > ps:
-            a = np.concatenate(
-                [a, np.full((d, pp - ps) + a.shape[2:], fill, a.dtype)],
-                axis=1)
-        return a.reshape((d * pp,) + a.shape[2:])
-
-    def _ungroup(self, a, order: np.ndarray) -> np.ndarray:
-        """Drop padding, restore the caller's participant order. Multi-host
-        "data"-sharded outputs are allgathered into every process first."""
-        d, ps, pp = self.n_dev, self.p_shard, self.p_pad
-        a = MESH.fetch_global(a)
-        a = a.reshape((d, pp) + a.shape[1:])
-        a = a[:, :ps].reshape((d * ps,) + a.shape[2:])
-        out = np.empty_like(a)
-        out[order] = a
-        return out
-
-    def _put(self, a: np.ndarray, spec):
-        """Device placement of one grouped host input. Single-process jit
-        handles the (re)sharding itself; a multi-process mesh needs the
-        global array assembled from each process's local rows."""
-        if self.mesh is None or jax.process_count() == 1:
-            return jnp.asarray(a)
-        return MESH.host_local_array(self.mesh, spec, a)
-
-    def step(self, global_f, local_buf, ef_buf, parts: np.ndarray, xs, ys,
-             ws, ims, lr, theta_d, theta_u):
-        """Run one MASKED round at the [τ, b_max] cap. Returns (global_f,
-        local_buf, ef_buf, down_bits [P], up_bits [P], gnorms [P]) with
-        per-participant outputs as np arrays in the caller's ``parts``
-        order."""
-        owner = parts // self.rows_per_shard
-        if self.n_dev > 1:
-            counts = np.bincount(owner, minlength=self.n_dev)
-            if not (counts == self.p_shard).all():
-                raise ValueError(
-                    "sharded mode needs stratified participants "
-                    f"({self.p_shard} per shard; got {counts.tolist()})")
-        order = np.argsort(owner, kind="stable")
-        g = lambda a, fill: self._put(self._group(a, order, fill),
-                                      P("data"))
-        new_global, new_buf, new_ef, db, ub, gn = self._round_step(
-            global_f, local_buf, ef_buf,
-            g(parts.astype(np.int32), np.int32(self.n_clients)),
-            g(np.ones(len(parts), np.float32), np.float32(0.0)),
-            g(xs, xs.dtype.type(0)), g(ys, ys.dtype.type(0)),
-            g(ws, np.float32(0.0)), g(ims, np.float32(0.0)), lr,
-            g(theta_d, np.float32(0.0)), g(theta_u, np.float32(0.0)))
-        return (new_global, new_buf, new_ef, self._ungroup(db, order),
-                self._ungroup(ub, order), self._ungroup(gn, order))
-
-    # -- ragged execution ---------------------------------------------------
-
-    def _tier_chunks(self, tg: TierGroup, parts32: np.ndarray,
-                     theta_d: np.ndarray, theta_u: np.ndarray):
-        """Yield (positions, out_slots, device-input dict) per tier chunk.
-
-        Single-device: zero-copy views over the (already rung-padded) tier
-        arrays. Sharded: each shard's tier members are regrouped shard-major
-        and padded to a common rung decomposition (tier membership is
-        capability-driven, so per-shard counts differ); positions/out_slots
-        map the [n_dev·c] outputs back to valid participants."""
-        n_cl = np.int32(self.n_clients)
-        g = len(tg.pos)
-        if self.n_dev == 1:
-            for s, c in tg.slices:
-                pos_c = tg.pos[s:min(s + c, g)]
-                v = len(pos_c)
-                pc = np.full(c, n_cl, np.int32)
-                pc[:v] = parts32[pos_c]
-                pm = np.zeros(c, np.float32)
-                pm[:v] = 1.0
-                td = np.zeros(c, np.float32)
-                td[:v] = theta_d[pos_c]
-                tu = np.zeros(c, np.float32)
-                tu[:v] = theta_u[pos_c]
-                yield pos_c, np.arange(v), dict(
-                    parts=pc, pmask=pm, xs=tg.xs[s:s + c], ys=tg.ys[s:s + c],
-                    ws=tg.ws[s:s + c], ims=tg.ims[s:s + c], td=td, tu=tu)
-            return
-        d = self.n_dev
-        owner = parts32[tg.pos] // self.rows_per_shard
-        iloc = [np.flatnonzero(owner == s) for s in range(d)]
-        length = max(len(il) for il in iloc)
-        l_pad, slices = self.tier_layout(length)
-        sel = np.full((d, l_pad), -1, np.int64)
-        for s_i, il in enumerate(iloc):
-            sel[s_i, :len(il)] = il
-        for s, c in slices:
-            sc = sel[:, s:s + c].reshape(-1)
-            valid = sc >= 0
-            pos_c = tg.pos[sc[valid]]
-            pc = np.full(d * c, n_cl, np.int32)
-            pc[valid] = parts32[pos_c]
-            pm = valid.astype(np.float32)
-            td = np.zeros(d * c, np.float32)
-            td[valid] = theta_d[pos_c]
-            tu = np.zeros(d * c, np.float32)
-            tu[valid] = theta_u[pos_c]
-
-            def take(a):
-                out = np.zeros((d * c,) + a.shape[1:], a.dtype)
-                out[valid] = a[sc[valid]]
-                return out
-
-            yield pos_c, np.flatnonzero(valid), dict(
-                parts=pc, pmask=pm, xs=take(tg.xs), ys=take(tg.ys),
-                ws=take(tg.ws), ims=take(tg.ims), td=td, tu=tu)
-
-    def step_ragged(self, global_f, local_buf, ef_buf, parts: np.ndarray,
-                    tiers: list, lr, theta_d, theta_u):
-        """Run one PLAN-SHAPED round: one jitted chunk step per occupied
-        tier shape, threading the donated (local buffer, EF buffer, upload
-        accumulator) through every call. Same return contract as `step`."""
-        n = len(parts)
-        n_params = self.spec.n_params
-        g_cdf, g_max = self._hist(global_f)
-        if self.mesh is None:
-            up_sum = jnp.zeros(n_params, jnp.float32)
-        else:
-            up_sum = self._put(np.zeros((self.n_dev, n_params), np.float32),
-                               P("data", None))
-        buf, ef = local_buf, ef_buf
-        parts32 = np.asarray(parts, np.int32)
-        pend = []
-        for tg in tiers:
-            key = (int(tg.b), int(tg.tau))
-            self.tier_occupancy[key] = (self.tier_occupancy.get(key, 0)
-                                        + len(tg.pos))
-            for pos_c, slots, a in self._tier_chunks(tg, parts32, theta_d,
-                                                     theta_u):
-                # count the rows actually executed (the sharded path re-pads
-                # tiers to a cross-shard rung, exceeding the tier's g_pad)
-                self.work_ragged += len(a["parts"]) * tg.tau * tg.b
-                self._shapes_seen.add((len(a["parts"]) // self.n_dev,
-                                       int(tg.tau), int(tg.b)))
-                buf, ef, up_sum, db, ub, gn = self._tier_chunk(
-                    buf, ef, up_sum, global_f, g_cdf, g_max,
-                    self._put(a["parts"], P("data")),
-                    self._put(a["pmask"], P("data")),
-                    self._put(a["xs"], P("data")),
-                    self._put(a["ys"], P("data")),
-                    self._put(a["ws"], P("data")),
-                    self._put(a["ims"], P("data")), lr,
-                    self._put(a["td"], P("data")),
-                    self._put(a["tu"], P("data")))
-                pend.append((pos_c, slots, db, ub, gn))
-        self.work_cap += n * self.tau_cap * self.b_cap
-        new_global = self._finalize(global_f, up_sum, np.float32(n))
-        db_o = np.empty(n, np.float32)
-        ub_o = np.empty(n, np.float32)
-        gn_o = np.empty(n, np.float32)
-        for pos_c, slots, db, ub, gn in pend:
-            db_o[pos_c] = MESH.fetch_global(db)[slots]
-            ub_o[pos_c] = MESH.fetch_global(ub)[slots]
-            gn_o[pos_c] = MESH.fetch_global(gn)[slots]
-        return new_global, buf, ef, db_o, ub_o, gn_o
-
-
-# ---------------------------------------------------------------------------
-# The simulator: orchestration + accounting
-# ---------------------------------------------------------------------------
-
-class Simulator:
-    def __init__(self, cfg: SimConfig):
-        self.cfg = cfg
-        if cfg.multi_host and not cfg.sharded:
-            raise ValueError("multi_host=True requires sharded=True (the "
-                             "multi-host mesh is the sharded 'data' axis)")
-        if cfg.multi_host:
-            # MUST precede every jax call in this process (backend resolve,
-            # param init): jax.distributed.initialize refuses to run after
-            # the backends are up. Single-process (no cluster) falls back
-            # cleanly, but say so — N processes silently simulating in
-            # isolation would look like a successful multi-host run.
-            if not MESH.init_distributed():
-                warnings.warn(
-                    "multi_host=True but no multi-process jax runtime was "
-                    "detected (or jax was already initialized); running "
-                    "single-process on the local devices", stacklevel=2)
-        self.backend = C.resolve_backend(cfg.backend)
-        ds_fn = synthetic.DATASETS[cfg.dataset]
-        self.data = ds_fn(seed=cfg.seed, scale=cfg.data_scale,
-                          **(cfg.dataset_kwargs or {}))
-        model_name = cfg.model or PM.DATASET_MODEL[cfg.dataset]
-        init_fn, self.apply_fn = PM.MODELS[model_name]
-        feat_kw = {}
-        if model_name == "lr":
-            feat_kw = {"n_features": self.data.x_train.shape[-1]}
-        self.params0 = init_fn(jax.random.PRNGKey(cfg.seed),
-                               n_classes=self.data.n_classes, **feat_kw)
-        # flatten ONCE: the engine state is flat from here on
-        self.flat0, self.spec = C.flatten_tree(self.params0)
-        self.n_params = self.spec.n_params
-        self.model_bits = self.n_params * C.FULL_BITS
-
-        self.splits, label_dist, volumes = partition.dirichlet_partition(
-            self.data.y_train, cfg.n_clients, cfg.p_heterogeneity, cfg.seed)
-        self.volumes = volumes
-        self.label_dist = label_dist
-        self.cap = CapabilityModel(cfg.n_clients, cfg.seed)
-
-        self.mesh = MESH.make_data_mesh() if cfg.sharded else None
-        self.n_dev = self.mesh.shape["data"] if self.mesh is not None else 1
-        if cfg.n_clients % self.n_dev:
-            raise ValueError(f"n_clients ({cfg.n_clients}) must divide over "
-                             f"{self.n_dev} shards")
-        n_part = max(1, int(round(cfg.participation * cfg.n_clients)))
-        # sharded rounds need equal per-shard cohorts (static shapes)
-        self.n_part = max(self.n_dev, (n_part // self.n_dev) * self.n_dev)
-        if self.n_part != n_part:
-            warnings.warn(
-                f"sharded mode adjusted the cohort from {n_part} to "
-                f"{self.n_part} participants/round ({self.n_dev} shards "
-                "need equal per-shard cohorts); pick a participation whose "
-                "cohort divides the device count to silence this",
-                stacklevel=2)
-
-        self.policy = None if cfg.scheme == "caesar" else \
-            self._make_policy(cfg.scheme)
-        self.planner = RoundPlanner(cfg, volumes, label_dist,
-                                    self.model_bits, self.policy)
-        self.executor = RoundExecutor(
-            cfg, self.apply_fn, self.spec, self.backend,
-            quantize=bool(getattr(self.policy, "quantize", False)),
-            n_part=self.n_part, mesh=self.mesh,
-            use_ef=cfg.caesar.use_error_feedback)
-
-        def evaluate(flat_params, x, y):
-            logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
-                                   x)
-            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
-
-        self._eval = jax.jit(evaluate)
-
-    # planner-owned state, exposed for tests/benchmarks
-    @property
-    def caesar_state(self):
-        return self.planner.caesar_state
-
-    @property
-    def grad_norms(self):
-        return self.planner.grad_norms
-
-    def _make_policy(self, name):
-        if name == "fic":
-            return BL.FIC(compress_down=not self.cfg.fic_up_only,
-                          compress_up=not self.cfg.fic_down_only)
-        if name == "cac":
-            return BL.CAC(compress_down=not self.cfg.fic_up_only,
-                          compress_up=not self.cfg.fic_down_only)
-        return BL.POLICIES[name]()
-
-    # ------------------------------------------------------------------
-    # Host-side producer work (participant draw + plan + batch gather).
-    # Every round owns a SeedSequence-derived RNG stream, so the pipelined
-    # and synchronous drivers consume identical randomness — a shared
-    # generator cannot be read out of lockstep from a worker thread.
-    # ------------------------------------------------------------------
-
-    def _round_rng(self, t: int) -> np.random.Generator:
-        """Deterministic per-round stream: SeedSequence(seed, (2, t)).
-        Spawn-key kinds 0/1 belong to CapabilityModel's per-epoch/per-round
-        streams; 2 is the round's sampling stream."""
-        return np.random.default_rng(
-            np.random.SeedSequence(self.cfg.seed, spawn_key=(2, t)))
-
-    def _select_participants(self, rng: np.random.Generator) -> np.ndarray:
-        """Uniform draw; stratified per shard in sharded mode (each device
-        must own its participants' buffer rows). With one device the two
-        are the same draw."""
-        n, d = self.cfg.n_clients, self.n_dev
-        if d <= 1:
-            return rng.choice(n, self.n_part, replace=False)
-        rows, ps = n // d, self.n_part // d
-        return np.concatenate([
-            rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
-                       replace=False)
-            for s in range(d)])
-
-    def _draw_indices(self, rng: np.random.Generator,
-                      parts: np.ndarray) -> np.ndarray:
-        """Cap-shaped batch-index draw [P, τ, b_max] — ALWAYS at the caps,
-        whatever the plan says: the tier engine consumes a per-participant
-        [:τ_tier, :b_tier] PREFIX of this draw, so the randomness stream is
-        plan-independent (ragged and masked runs draw identically) and a
-        participant's first b_i samples of iteration k are the same samples
-        under either engine."""
-        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
-        idx = np.empty((len(parts), tau_cap, b_cap), np.intp)
-        for i, ci in enumerate(parts):
-            idx[i] = rng.choice(self.splits[ci], size=(tau_cap, b_cap),
-                                replace=True)
-        return idx
-
-    def _gather_cap(self, idx: np.ndarray, out):
-        """Gather the cap-shaped training batches for ``idx`` into ``out``
-        (a preallocated (xs, ys) pair — filled IN PLACE so the pipelined
-        driver's two persistent buffer sets never mmap/munmap tens of MB
-        mid-step, which would stall the XLA threads with TLB shootdowns)."""
-        xtr, ytr = self.data.x_train, self.data.y_train
-        xs, ys = out
-        flat = idx.reshape(-1)
-        np.take(xtr, flat, axis=0, out=xs.reshape((-1,) + xtr.shape[1:]))
-        np.take(ytr, flat, axis=0, out=ys.reshape((-1,) + ytr.shape[1:]))
-        return xs, ys
-
-    def _prefetch_round(self, t: int, out=None):
-        """Round t's cap-shaped host sampling: (participants, xs, ys).
-
-        Pure numpy on data that is read-only after __init__. The batch
-        *indices* need only the caps (b_max, τ) — plan-dependent
-        per-participant (batch, τ_i) enter later as masks (`_batch_masks`)
-        or tier prefixes. Kept as the cap-gather primitive for the masked
-        engine, policy schemes, and external callers (bench_round's
-        LegacyEngine drives it directly)."""
-        rng = self._round_rng(t)
-        parts = self._select_participants(rng)
-        idx = self._draw_indices(rng, parts)
-        if out is None:
-            out = self._alloc_batch_buffers(len(parts))
-        xs, ys = self._gather_cap(idx, out)
-        return parts, xs, ys
-
-    def _alloc_batch_buffers(self, n_parts: int):
-        """One cap-shaped (xs, ys) buffer set for `_prefetch_round`."""
-        b_cap, tau_cap = self.cfg.caesar.b_max, self.cfg.caesar.tau
-        xtr, ytr = self.data.x_train, self.data.y_train
-        return (np.empty((n_parts, tau_cap, b_cap) + xtr.shape[1:],
-                         xtr.dtype),
-                np.empty((n_parts, tau_cap, b_cap) + ytr.shape[1:],
-                         ytr.dtype))
-
-    @staticmethod
-    def _batch_masks(batch_sizes, taus, b_cap, tau_cap):
-        """Per-participant (sample-weight [P,τ,b], iter-mask [P,τ]) masks
-        realizing the planned batch sizes / local-iteration counts on the
-        prefetched cap-shaped batches."""
-        p = len(batch_sizes)
-        ws = np.zeros((p, tau_cap, b_cap), np.float32)
-        for i, b in enumerate(batch_sizes):
-            ws[i, :, :int(b)] = 1.0
-        ims = (np.arange(tau_cap)[None, :]
-               < np.asarray(taus)[:, None]).astype(np.float32)
-        return ws, ims
-
-    # -- plan-shaped tier marshalling (DESIGN.md §8) -----------------------
-
-    def _plan_tiers(self, batch: np.ndarray, taus: np.ndarray) -> list:
-        """Quantize the plan to the (b, τ) lattice and group participants
-        by tier. Deterministic processing order: tiers descending by
-        (τ, b), participants within a tier in parts order (stable)."""
-        ccfg = self.cfg.caesar
-        bt, tt = BS.quantize_plan(batch, taus, ccfg.b_min, ccfg.b_max,
-                                  ccfg.tau)
-        groups = []
-        for tau_t, b_t in sorted(set(zip(tt.tolist(), bt.tolist())),
-                                 reverse=True):
-            pos = np.flatnonzero((tt == tau_t) & (bt == b_t))
-            groups.append((int(b_t), int(tau_t), pos))
-        return groups
-
-    def _tier_masks(self, batch, taus, pos, b_t, tau_t, g_pad):
-        """Rung-padded (ws [g_pad,τ,b], ims [g_pad,τ]) realizing the exact
-        planned (b_i, τ_i) inside the tier shape — identical semantics to
-        `_batch_masks` at the cap, restricted to the tier prefix."""
-        g = len(pos)
-        ws = np.zeros((g_pad, tau_t, b_t), np.float32)
-        ws[:g] = (np.arange(b_t)[None, None, :]
-                  < np.asarray(batch)[pos, None, None])
-        ims = np.zeros((g_pad, tau_t), np.float32)
-        ims[:g] = (np.arange(tau_t)[None, :] < np.asarray(taus)[pos, None])
-        return ws, ims
-
-    def _ensure_flat_buffers(self, bufs: dict, x_rows: int):
-        """Grow-on-demand flat sample pools the tier gather carves into —
-        persistent per slot, so the steady state allocates nothing (the
-        per-round total Σ g_pad·τ_t·b_t varies with tier occupancy)."""
-        xtr, ytr = self.data.x_train, self.data.y_train
-        cur = bufs.get("flat")
-        if cur is None or cur[0].shape[0] < x_rows:
-            bufs["flat"] = (np.empty((x_rows,) + xtr.shape[1:], xtr.dtype),
-                            np.empty((x_rows,) + ytr.shape[1:], ytr.dtype))
-        return bufs["flat"]
-
-    def _tiers_from_idx(self, idx: np.ndarray, batch, taus,
-                        bufs: dict) -> list:
-        """Tier-shaped batch gather (the pipelined worker's path): for each
-        tier, gather ONLY the [:τ_t, :b_t] prefix of the cap-shaped index
-        draw — host sampling bytes shrink by the plan-shaped work factor."""
-        groups = self._plan_tiers(batch, taus)
-        layouts = [self.executor.tier_layout(len(pos))
-                   for _, _, pos in groups]
-        total = sum(gl[0] * tau_t * b_t
-                    for (b_t, tau_t, _), gl in zip(groups, layouts))
-        xflat, yflat = self._ensure_flat_buffers(bufs, total)
-        xtr, ytr = self.data.x_train, self.data.y_train
-        feat = xtr.shape[1:]
-        tiers, off = [], 0
-        for (b_t, tau_t, pos), (g_pad, slices) in zip(groups, layouts):
-            g = len(pos)
-            rows = g_pad * tau_t * b_t
-            xv = xflat[off:off + rows]
-            yv = yflat[off:off + rows]
-            off += rows
-            sel = idx[pos, :tau_t, :b_t].reshape(-1)
-            np.take(xtr, sel, axis=0, out=xv[:sel.size])
-            np.take(ytr, sel, axis=0, out=yv[:sel.size])
-            if rows > sel.size:          # zero the rung padding
-                xv[sel.size:] = 0
-                yv[sel.size:] = 0
-            ws, ims = self._tier_masks(batch, taus, pos, b_t, tau_t, g_pad)
-            tiers.append(TierGroup(
-                b=b_t, tau=tau_t, pos=pos, g_pad=g_pad, slices=slices,
-                xs=xv.reshape((g_pad, tau_t, b_t) + feat),
-                ys=yv.reshape((g_pad, tau_t, b_t)), ws=ws, ims=ims))
-        return tiers
-
-    def _tiers_from_cap(self, xs: np.ndarray, ys: np.ndarray, batch,
-                        taus) -> list:
-        """Tier groups sliced out of an already cap-gathered batch (the
-        policy-scheme path, where the plan needs execution feedback and is
-        only known on the main thread after the worker gathered)."""
-        groups = self._plan_tiers(batch, taus)
-        tiers = []
-        for b_t, tau_t, pos in groups:
-            g = len(pos)
-            g_pad, slices = self.executor.tier_layout(g)
-            xs_t = np.zeros((g_pad, tau_t, b_t) + xs.shape[3:], xs.dtype)
-            xs_t[:g] = xs[pos, :tau_t, :b_t]
-            ys_t = np.zeros((g_pad, tau_t, b_t), ys.dtype)
-            ys_t[:g] = ys[pos, :tau_t, :b_t]
-            ws, ims = self._tier_masks(batch, taus, pos, b_t, tau_t, g_pad)
-            tiers.append(TierGroup(b=b_t, tau=tau_t, pos=pos, g_pad=g_pad,
-                                   slices=slices, xs=xs_t, ys=ys_t, ws=ws,
-                                   ims=ims))
-        return tiers
-
-    def _prefetch_pkg(self, t: int, bufs: dict) -> RoundPkg:
-        """The full producer step for round t (worker thread when
-        pipelined): draw → capability snapshot → [Caesar: plan + state
-        advance] → batch gather (tier-shaped when the plan is known,
-        cap-shaped otherwise)."""
-        rng = self._round_rng(t)
-        parts = self._select_participants(rng)
-        idx = self._draw_indices(rng, parts)
-        mu, bw_d, bw_u = self.cap.snapshot(t)
-        if self.planner.is_caesar and self.cfg.ragged:
-            # planning inside the producer is what makes the TIER-shaped
-            # gather possible; without that payoff (masked mode) the plan
-            # stays on the main thread — its (tiny) jitted math would only
-            # contend with the in-flight device step
-            plan = self.planner.plan(t, parts, mu, bw_d, bw_u)
-            self.planner.advance(t, parts)
-            tiers = self._tiers_from_idx(idx, plan[2], plan[3], bufs)
-            return RoundPkg(parts, mu, bw_d, bw_u, plan=plan, tiers=tiers)
-        if "cap" not in bufs:
-            bufs["cap"] = self._alloc_batch_buffers(self.n_part)
-        xs, ys = self._gather_cap(idx, bufs["cap"])
-        return RoundPkg(parts, mu, bw_d, bw_u, xs=xs, ys=ys)
-
-    def _init_buffers(self):
-        """Fresh (global, local, EF) device buffers — the step donates its
-        inputs, so `flat0` itself must stay intact. The local buffer is
-        stored at ``buffer_dtype`` (cast BEFORE the [n, n_params] tile so
-        no f32-sized transient exists at bf16)."""
-        n = self.cfg.n_clients
-        ef_w = self.executor.ef_width
-        dt = self.executor.buf_dtype
-        # device_put of a broadcast VIEW materializes exactly one
-        # [n, n_params] buffer — a jnp.tile instead peaks at 2× the buffer
-        # (the n=1000 local buffer is the largest allocation of the run)
-        row = np.asarray(jnp.asarray(self.flat0, dt))
-        if self.mesh is None:
-            return (jnp.array(self.flat0, copy=True),
-                    jax.device_put(np.broadcast_to(row[None, :],
-                                                   (n, row.size))),
-                    jnp.zeros((n, ef_w), jnp.float32))
-        # broadcast_to views: multi-host processes materialize only their
-        # own buffer rows (launch.mesh.host_local_array)
-        return (MESH.host_local_array(self.mesh, P(),
-                                      np.asarray(self.flat0).copy()),
-                MESH.host_local_array(self.mesh, P("data", None),
-                                      np.broadcast_to(row[None, :],
-                                                      (n, row.size))),
-                MESH.host_local_array(self.mesh, P("data", None),
-                                      np.zeros((n, ef_w), np.float32)))
-
-    # ------------------------------------------------------------------
-    def run(self, log: Callable[[str], None] = lambda s: None) -> History:
-        cfg = self.cfg
-        ccfg = cfg.caesar
-        b_max, tau = ccfg.b_max, ccfg.tau
-        q_bits = float(self.model_bits)
-        hist = History()
-        global_f, local_buf, ef_buf = self._init_buffers()
-        cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
-        # double-buffered producer: one worker prefetches round t+1's
-        # package (participants, plan, tier- or cap-shaped batches — pure
-        # numpy + tiny jitted plan math) into the OFF buffer slot while the
-        # device runs round t from the other — two persistent slots, filled
-        # in place, so steady state allocates nothing
-        pool = (ThreadPoolExecutor(max_workers=1) if cfg.pipelined
-                else None)
-        n_bufs = 2 if pool else 1
-        bufs = [dict() for _ in range(n_bufs)]
-
-        def prefetch(t):
-            return self._prefetch_pkg(t, bufs[t % n_bufs])
-
-        try:
-            pending = pool.submit(prefetch, 1) if pool else None
-            for t in range(1, cfg.rounds + 1):
-                wall0 = time.perf_counter()
-                if pool:
-                    pkg = pending.result()
-                    if t < cfg.rounds:
-                        pending = pool.submit(prefetch, t + 1)
-                else:
-                    pkg = prefetch(t)
-                parts = pkg.parts
-                mu, bw_d, bw_u = pkg.mu, pkg.bw_d, pkg.bw_u
-                lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
-
-                if pkg.plan is not None:
-                    theta_d, theta_u, batch, taus = pkg.plan
-                else:
-                    theta_d, theta_u, batch, taus = self.planner.plan(
-                        t, parts, mu, bw_d, bw_u)
-                    # participation records advance right after planning
-                    # (masked caesar; the worker never touches the planner
-                    # on this path, so main-thread ordering is the only
-                    # ordering)
-                    self.planner.advance(t, parts)
-                td32 = np.asarray(theta_d, np.float32)
-                tu32 = np.asarray(theta_u, np.float32)
-                if cfg.ragged:
-                    tiers = (pkg.tiers if pkg.tiers is not None else
-                             self._tiers_from_cap(pkg.xs, pkg.ys, batch,
-                                                  taus))
-                    (global_f, local_buf, ef_buf, down_bits, up_bits,
-                     gnorms) = self.executor.step_ragged(
-                        global_f, local_buf, ef_buf, parts, tiers, lr,
-                        td32, tu32)
-                else:
-                    ws, ims = self._batch_masks(batch, taus, b_max, tau)
-                    (global_f, local_buf, ef_buf, down_bits, up_bits,
-                     gnorms) = self.executor.step(
-                        global_f, local_buf, ef_buf, parts, pkg.xs, pkg.ys,
-                        ws, ims, lr, td32, tu32)
-                self.planner.observe(t, parts, gnorms)
-
-                # --- accounting ---
-                # traffic: actual hybrid/top-k payload bits on the wire
-                down_b = np.asarray(down_bits, np.float64)
-                up_b = np.asarray(up_bits, np.float64)
-                cum_bits += float(down_b.sum() + up_b.sum())
-                # time + barrier waiting: the Eq.-7 θ·Q/β model — the SAME
-                # model optimize_batch_sizes equalizes (core/batchsize.py),
-                # evaluated at the PLANNED (b_i, τ_i) — tier quantization
-                # is an executor-shape concern, invisible to simulated time
-                times = np.asarray(BS.round_times(
-                    np.asarray(theta_d, np.float64),
-                    np.asarray(theta_u, np.float64), q_bits,
-                    bw_d[parts], bw_u[parts],
-                    np.asarray(taus, np.float64),
-                    np.asarray(batch, np.float64), mu[parts]))
-                cum_time += float(times.max())
-                waiting = float(np.mean(times.max() - times))
-                waiting_sum += waiting
-                hist.waiting_per_round.append(waiting)
-                # the np.asarray conversions above synced on the step
-                # outputs, so this is an honest per-round host wall-clock
-                hist.wall_per_round.append(time.perf_counter() - wall0)
-                if t == 1:
-                    hist.compile_s = hist.wall_per_round[0]
-
-                if t % cfg.eval_every == 0 or t == cfg.rounds:
-                    ne = min(cfg.eval_samples, len(self.data.y_test))
-                    acc = float(self._eval(global_f,
-                                           jnp.asarray(self.data.x_test[:ne]),
-                                           jnp.asarray(self.data.y_test[:ne])))
-                    hist.rounds.append(t)
-                    hist.sim_time.append(cum_time)
-                    hist.traffic_bits.append(cum_bits)
-                    hist.accuracy.append(acc)
-                    hist.waiting.append(waiting_sum / t)
-                    # warm mean: round 1 carries the jit compile
-                    # (hist.compile_s); until a warm sample exists, fall
-                    # back to the cold one
-                    warm = hist.wall_per_round[1:] or hist.wall_per_round
-                    hist.wall.append(float(np.mean(warm)))
-                    log(f"[{cfg.scheme}/{cfg.dataset}] round {t:4d} "
-                        f"acc={acc:.4f} time={cum_time:,.0f}s "
-                        f"traffic={cum_bits/8e9:.3f}GB "
-                        f"wait={waiting_sum / t:.1f}s")
-                    if (cfg.target_accuracy is not None
-                            and acc >= cfg.target_accuracy):
-                        break
-        finally:
-            if pool:
-                pool.shutdown(wait=False, cancel_futures=True)
-        self.global_flat = global_f          # expose final flat model
-        self.ef_flat = ef_buf                # [n, n_params] residuals (EF on)
-        return hist
-
-    def reset(self):
-        """Reset round/planner state so `run` can be repeated on the SAME
-        simulator: the replay consumes identical seed streams against warm
-        jit caches. Benchmarking helper — the ragged engine compiles tier
-        shapes lazily as rounds first occupy them, so a cold run folds
-        shape compiles into mid-run walls; a reset+rerun measures the
-        steady state (every executor cache intact, no model/plan state
-        carried over)."""
-        self.planner = RoundPlanner(self.cfg, self.volumes, self.label_dist,
-                                    self.model_bits, self.policy)
-
-    # ------------------------------------------------------------------
-    def global_params(self) -> Any:
-        """Final global model as a pytree (unflatten only at the boundary)."""
-        flat = getattr(self, "global_flat", self.flat0)
-        return C.unflatten_vector(flat, self.spec)
+from repro.fl.driver import (History, RoundPkg, SimConfig,  # noqa: F401
+                             Simulator)
+from repro.fl.executor import (BUFFER_DTYPES, EF_EXTRA_ARRAYS,  # noqa: F401
+                               RoundExecutor, TierGroup)
+from repro.fl.planner import RoundPlanner  # noqa: F401
+from repro.fl.state import ClientStateStore  # noqa: F401
+
+__all__ = [
+    "BUFFER_DTYPES",
+    "EF_EXTRA_ARRAYS",
+    "ClientStateStore",
+    "History",
+    "RoundExecutor",
+    "RoundPkg",
+    "RoundPlanner",
+    "SimConfig",
+    "Simulator",
+    "TierGroup",
+]

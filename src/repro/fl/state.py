@@ -1,0 +1,532 @@
+"""Sublinear client-state store (DESIGN.md §9).
+
+The paper's stale-local-model semantics (§4.1) need one [n_params] row per
+client — but only clients that have EVER participated hold anything besides
+the initial model, and Caesar's download path already prices bounded
+deviation between a client's true stale replica and what the server assumes
+it holds. `ClientStateStore` exploits both: the resident row pool is
+**participation-keyed** (a client owns a pool slot only while it is
+active/recently-active) and cold rows may be collapsed onto their
+staleness-cluster centroid, so resident state scales with the active
+cohort, not the registered population — the last O(n_clients) RSS term in
+the round engine becomes O(capacity).
+
+Layout:
+
+* device **pool** ``[capacity, n_params]`` at the storage dtype (bf16
+  folds in here) plus an **ef_pool** ``[capacity, ef_width]`` f32 residual
+  carry — both donated through the executor's jitted steps exactly like
+  the old dense buffers;
+* host **slot map**: ``slot_of [n_clients]`` (−1 = not resident),
+  ``client_of [capacity]`` (−1 = free), ``last_used [n_clients]`` (round of
+  last participation), ``evicted_tier [n_clients]`` (−1 = never evicted);
+* host **centroids** ``[n_tiers, n_params]``: running means of evicted
+  rows, bucketed by log2-staleness tier — the §4.1 staleness-cluster
+  structure applied to eviction. A re-activated client whose exact row was
+  dropped restores its tier centroid (bounded deviation, same family of
+  approximation the download compressor already makes); a never-evicted
+  first-timer restores the initial model row, bit-matching the dense
+  engine's init.
+
+Capacity policy (``SimConfig.state_capacity``):
+
+* ``None`` (default) — grow on demand: start at a small power-of-two
+  multiple of the cohort and double (per shard) until every
+  ever-participated client fits; nothing is ever evicted, so trajectories
+  are **bit-identical** to the dense buffer (slot indirection is
+  numerically invisible — same gathered values, same reduction order).
+  Power-of-two growth bounds jit recompiles at log2(n/cohort).
+* ``0`` — dense: capacity = n_clients, ``slot_of`` = identity, every row
+  pre-materialized. Exact old-engine semantics AND footprint.
+* ``int > 0`` — hard cap with **staleness-tiered LRU eviction**: when a
+  shard segment is full, the coldest resident clients (oldest
+  ``last_used`` ⇒ highest staleness tier) are folded into their tier
+  centroid and their slots recycled. The current round's participants are
+  never evicted, so capacity must cover the per-shard cohort.
+
+``state_offload`` keeps evicted rows EXACTLY instead of (in addition to)
+the centroid fold: ``"host"`` spills to pinned host numpy, ``"memmap"`` to
+an on-disk file — re-activation restores the exact row, so a capped pool
+with offload is a paging scheme, not an approximation.
+
+Sharding: the pool is row-partitioned over the 1-D "data" mesh exactly
+like the old dense buffer; slot ids are ``shard * cap_per_shard + local``,
+so each shard's segment is managed independently (per-shard free lists /
+eviction) and a client's slot always lives on the device that owns the
+client (stratified participant draw, DESIGN.md §7).
+
+Checkpointing: ``state_dict()`` is a flat dict-of-arrays pytree (pool cast
+to f32 for serializability — bf16 round-trips losslessly through f32) that
+`checkpoint.manager.CheckpointManager` can save/restore; it carries the
+slot map, eviction metadata (tiers, centroids, counts) and any offloaded
+rows, so a restored store resumes with identical semantics.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as MESH
+
+STATE_OFFLOADS = ("none", "host", "memmap")
+# fresh pools start at this multiple of the per-shard cohort (pow2-rounded)
+GROW_COHORT_FACTOR = 4
+DEFAULT_N_TIERS = 8
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two ≥ n (n ≥ 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+class _OffloadStore:
+    """Exact cold-row spill: evicted rows keep their full contents on the
+    host ("host": plain numpy) or on disk ("memmap"), so re-activation
+    restores bit-exact state instead of the staleness-tier centroid. Rows
+    are [n_params + ef_width] f32; a free-list recycles row indices."""
+
+    BLOCK = 256          # growth granularity (rows)
+
+    def __init__(self, kind: str, n_params: int, ef_width: int,
+                 directory=None):
+        if kind not in ("host", "memmap"):
+            raise ValueError(f"unknown offload kind {kind!r}")
+        self.kind = kind
+        self.n_params = n_params
+        self.width = n_params + ef_width
+        self.row_of: dict[int, int] = {}     # client -> spill row
+        self._free: list[int] = []
+        self._rows = np.empty((0, self.width), np.float32)
+        if kind == "memmap":
+            self.dir = directory or tempfile.mkdtemp(prefix="caesar_cold_")
+            self.path = os.path.join(self.dir, "cold_rows.f32")
+
+    def _ensure(self, n: int):
+        if self._rows.shape[0] >= n:
+            return
+        alloc = max(self.BLOCK, _pow2(n))
+        if self.kind == "memmap":
+            with open(self.path, "a+b") as f:
+                f.truncate(alloc * self.width * 4)
+            grown = np.memmap(self.path, np.float32, mode="r+",
+                              shape=(alloc, self.width))
+        else:
+            grown = np.empty((alloc, self.width), np.float32)
+        grown[:self._rows.shape[0]] = self._rows[:]
+        self._rows = grown
+
+    def put(self, client: int, row: np.ndarray, ef: np.ndarray):
+        i = self.row_of.get(client)
+        if i is None:
+            i = self._free.pop() if self._free else len(self.row_of)
+            self._ensure(i + 1)
+            self.row_of[client] = i
+        self._rows[i, :self.n_params] = row
+        self._rows[i, self.n_params:] = ef
+
+    def pop(self, client: int):
+        """(row, ef) f32 copies, or None if the client was never spilled."""
+        i = self.row_of.pop(client, None)
+        if i is None:
+            return None
+        self._free.append(i)
+        out = np.array(self._rows[i])
+        return out[:self.n_params], out[self.n_params:]
+
+    def export(self):
+        """(clients [k] i64, rows [k, width] f32) in client order."""
+        cids = np.array(sorted(self.row_of), np.int64)
+        rows = np.stack([self._rows[self.row_of[c]] for c in cids]) \
+            if len(cids) else np.empty((0, self.width), np.float32)
+        return cids, rows
+
+    def load(self, cids: np.ndarray, rows: np.ndarray):
+        self.row_of.clear()
+        self._free.clear()
+        self._ensure(len(cids))
+        for i, c in enumerate(np.asarray(cids, np.int64)):
+            self.row_of[int(c)] = i
+            self._rows[i] = rows[i]
+
+
+class ClientStateStore:
+    """Participation-keyed row pool for the per-client local models + EF
+    residuals. See module docstring for the memory model; the executor
+    contract is three calls per round, all on the MAIN thread (the pool is
+    donated through the in-flight jitted step — a worker-thread mutation
+    would race the device):
+
+        slots = store.prepare(parts, t)      # activate/evict, host side
+        new_pool, new_ef = <jitted step>(store.pool, store.ef_pool, slots…)
+        store.adopt(new_pool, new_ef)
+    """
+
+    def __init__(self, n_clients: int, n_params: int, init_row: np.ndarray,
+                 *, ef_width: int = 0, dtype=jnp.float32,
+                 capacity: int | None = None, cohort: int = 1,
+                 n_shards: int = 1, mesh=None, offload: str = "none",
+                 offload_dir=None, n_tiers: int = DEFAULT_N_TIERS):
+        if n_clients % max(n_shards, 1):
+            raise ValueError(f"n_clients ({n_clients}) must divide over "
+                             f"{n_shards} shards")
+        if offload not in STATE_OFFLOADS:
+            raise ValueError(f"unknown state_offload {offload!r}; want one "
+                             f"of {STATE_OFFLOADS}")
+        self.n_clients = int(n_clients)
+        self.n_params = int(n_params)
+        self.ef_width = int(ef_width)
+        self.dtype = dtype
+        self.mesh = mesh
+        self.n_shards = max(int(n_shards), 1)
+        self.rows_per_shard = self.n_clients // self.n_shards
+        self.cohort_per_shard = max(-(-int(cohort) // self.n_shards), 1)
+        self.n_tiers = int(n_tiers)
+        # init_row: f32 values of the initial model AT the storage dtype
+        # (pre-quantized upstream), so activation writes bit-match the
+        # dense engine's broadcast init.
+        self.init_row = np.ascontiguousarray(init_row, np.float32)
+        if self.init_row.shape != (self.n_params,):
+            raise ValueError("init_row must be [n_params]")
+
+        self.dense = capacity == 0
+        self.growable = capacity is None
+        if self.dense:
+            self.cap_per_shard = self.rows_per_shard
+        elif self.growable:
+            self.cap_per_shard = min(
+                self.rows_per_shard,
+                _pow2(GROW_COHORT_FACTOR * self.cohort_per_shard))
+        else:
+            self.cap_per_shard = min(-(-int(capacity) // self.n_shards),
+                                     self.rows_per_shard)
+            if self.cap_per_shard < self.cohort_per_shard:
+                raise ValueError(
+                    f"state_capacity={capacity} cannot hold the per-shard "
+                    f"cohort ({self.cohort_per_shard} × {self.n_shards} "
+                    "shards); the current round's participants are never "
+                    "evicted")
+
+        # host maps
+        self.slot_of = np.full(self.n_clients, -1, np.int64)
+        self.last_used = np.zeros(self.n_clients, np.int64)
+        self.evicted_tier = np.full(self.n_clients, -1, np.int8)
+        self.centroids = np.zeros((self.n_tiers, self.n_params), np.float32)
+        self.centroid_n = np.zeros(self.n_tiers, np.int64)
+        self.offloader = (None if offload == "none" else
+                          _OffloadStore(offload, self.n_params,
+                                        self.ef_width, offload_dir))
+        # telemetry
+        self.n_evictions = 0
+        self.n_grows = 0
+        self.n_restore_fresh = 0
+        self.n_restore_centroid = 0
+        self.n_restore_offload = 0
+
+        self._build_jits()
+        self._init_pool()
+
+    # -- device plumbing ----------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.cap_per_shard * self.n_shards
+
+    def _sharding(self):
+        return (None if self.mesh is None
+                else NamedSharding(self.mesh, P("data", None)))
+
+    def _build_jits(self):
+        def scatter(pool, idx, rows):
+            # out-of-range idx (= capacity, the pad value) is dropped
+            return pool.at[idx].set(rows.astype(pool.dtype))
+
+        def gather(pool, idx):
+            return pool[idx].astype(jnp.float32)
+
+        kw = {}
+        if self.mesh is not None:
+            kw["out_shardings"] = self._sharding()
+        self._scatter = jax.jit(scatter, donate_argnums=(0,), **kw)
+        self._gather = jax.jit(gather)
+        self._to_f32 = jax.jit(lambda p: p.astype(jnp.float32))
+
+    def _place(self, host, spec):
+        if self.mesh is None:
+            return jax.device_put(host)
+        return MESH.host_local_array(self.mesh, spec, host)
+
+    def _init_pool(self):
+        cap, w, ef_w = self.capacity, self.n_params, self.ef_width
+        if self.dense:
+            # identity mapping, every row pre-materialized at the storage
+            # dtype. device_put of a broadcast VIEW materializes exactly
+            # one [n, w] buffer (a tile would peak at 2×).
+            row = np.asarray(jnp.asarray(self.init_row, self.dtype))
+            self.pool = self._place(np.broadcast_to(row[None, :], (cap, w)),
+                                    P("data", None))
+            self.slot_of = np.arange(self.n_clients, dtype=np.int64)
+            self.client_of = np.arange(cap, dtype=np.int64)
+        else:
+            self.pool = (jnp.zeros((cap, w), self.dtype)
+                         if self.mesh is None else
+                         self._place(np.zeros((cap, w), np.float32),
+                                     P("data", None)).astype(self.dtype))
+            self.client_of = np.full(cap, -1, np.int64)
+        self.ef_pool = (jnp.zeros((cap, ef_w), jnp.float32)
+                        if self.mesh is None else
+                        self._place(np.zeros((cap, ef_w), np.float32),
+                                    P("data", None)))
+
+    def adopt(self, pool, ef_pool):
+        """Take ownership of the post-step (donated-in, fresh-out) pools."""
+        self.pool = pool
+        self.ef_pool = ef_pool
+
+    # -- activation / eviction ----------------------------------------------
+
+    def prepare(self, parts: np.ndarray, t: int) -> np.ndarray:
+        """Make every client in ``parts`` resident; returns their pool slots
+        [P] int32 in parts order. Host-side bookkeeping + (rarely) a padded
+        device gather/scatter for evictions and restores."""
+        parts = np.asarray(parts, np.int64)
+        if not self.dense:
+            missing = parts[self.slot_of[parts] < 0]
+            if missing.size:
+                self._activate(np.unique(missing), parts, t)
+        self.last_used[parts] = t
+        return self.slot_of[parts].astype(np.int32)
+
+    def _shard_of_client(self, clients):
+        return clients // self.rows_per_shard
+
+    def _free_slots(self, shard: int) -> np.ndarray:
+        seg0 = shard * self.cap_per_shard
+        seg = self.client_of[seg0:seg0 + self.cap_per_shard]
+        return np.flatnonzero(seg < 0) + seg0
+
+    def _staleness_tier(self, clients, t: int) -> np.ndarray:
+        delta = np.maximum(t - self.last_used[clients], 1)
+        return np.minimum(np.log2(delta).astype(np.int64),
+                          self.n_tiers - 1).astype(np.int8)
+
+    def _activate(self, missing: np.ndarray, protected: np.ndarray, t: int):
+        shard = self._shard_of_client(missing)
+        need = np.bincount(shard, minlength=self.n_shards)
+        free = [self._free_slots(s) for s in range(self.n_shards)]
+        short = need - np.array([len(f) for f in free])
+        if self.growable and (short > 0).any():
+            used = self.cap_per_shard - np.array([len(f) for f in free])
+            self._grow(_pow2(int((used + need).max())))
+            free = [self._free_slots(s) for s in range(self.n_shards)]
+            short = need - np.array([len(f) for f in free])
+        if (short > 0).any():
+            self._evict(short, protected, t)
+            free = [self._free_slots(s) for s in range(self.n_shards)]
+        slots = np.concatenate([
+            free[s][:need[s]] for s in range(self.n_shards)])
+        # missing is sorted ⇒ shard-major ⇒ aligned with the per-shard
+        # ascending free slots: a deterministic assignment either way
+        self._restore(missing, slots, t)
+
+    def _grow(self, new_cap_per: int):
+        new_cap_per = min(new_cap_per, self.rows_per_shard)
+        if new_cap_per <= self.cap_per_shard:
+            return
+        old_per, w = self.cap_per_shard, self.n_params
+        if self.mesh is None and self.n_shards == 1:
+            # single segment: slot ids are stable, append device-side
+            self.pool = jnp.concatenate(
+                [self.pool, jnp.zeros((new_cap_per - old_per, w),
+                                      self.dtype)])
+            self.ef_pool = jnp.concatenate(
+                [self.ef_pool, jnp.zeros((new_cap_per - old_per,
+                                          self.ef_width), jnp.float32)])
+            grown = np.full(new_cap_per, -1, np.int64)
+            grown[:old_per] = self.client_of
+            self.client_of = grown
+        else:
+            # sharded segments move: slot = shard*cap_per + local. Growth
+            # happens ≤ log2(n/cohort) times; a host round-trip keeps the
+            # remap simple. Multi-process pools are not fully addressable —
+            # size those explicitly.
+            if jax.process_count() > 1:
+                raise NotImplementedError(
+                    "grow-on-demand pools are single-process; multi-host "
+                    "runs must set an explicit state_capacity (or 0)")
+            d = self.n_shards
+
+            def regrow(dev, width, dt):
+                host = np.asarray(self._to_f32(dev)).reshape(d, old_per,
+                                                             width)
+                out = np.zeros((d, new_cap_per, width), np.float32)
+                out[:, :old_per] = host
+                out = out.reshape(d * new_cap_per, width)
+                return self._place(out, P("data", None)).astype(dt)
+
+            self.pool = regrow(self.pool, w, self.dtype)
+            self.ef_pool = regrow(self.ef_pool, self.ef_width, jnp.float32)
+            res = self.slot_of >= 0
+            sh, loc = np.divmod(self.slot_of[res], old_per)
+            self.slot_of[res] = sh * new_cap_per + loc
+            self.client_of = np.full(d * new_cap_per, -1, np.int64)
+            self.client_of[self.slot_of[res]] = np.flatnonzero(res)
+        self.cap_per_shard = new_cap_per
+        self.n_grows += 1
+
+    def _evict(self, short: np.ndarray, protected: np.ndarray, t: int):
+        """Free ``short[s]`` slots in each shard s by folding the coldest
+        resident non-participants onto their staleness-tier centroid."""
+        prot = np.zeros(self.n_clients, bool)
+        prot[protected] = True
+        victims = []
+        for s in np.flatnonzero(short > 0):
+            seg0 = s * self.cap_per_shard
+            seg = self.client_of[seg0:seg0 + self.cap_per_shard]
+            cands = seg[(seg >= 0) & ~prot[np.maximum(seg, 0)]]
+            if len(cands) < short[s]:
+                raise RuntimeError(
+                    f"shard {s}: need {short[s]} slots but only "
+                    f"{len(cands)} evictable rows (capacity too small for "
+                    "the cohort)")
+            # coldest first: staleness tiers are monotone in last_used, so
+            # an ascending last_used sort IS tier-major + LRU-within-tier;
+            # client id breaks exact ties deterministically
+            order = np.lexsort((cands, self.last_used[cands]))
+            victims.append(cands[order[:short[s]]])
+        victims = np.concatenate(victims)
+        slots_v = self.slot_of[victims]
+        rows = self._read_rows(self.pool, slots_v)
+        efs = (self._read_rows(self.ef_pool, slots_v) if self.ef_width
+               else np.zeros((len(victims), 0), np.float32))
+        tier = self._staleness_tier(victims, t)
+        for k in np.unique(tier):
+            sel = rows[tier == k]
+            n0 = self.centroid_n[k]
+            self.centroids[k] = (n0 * self.centroids[k] + sel.sum(axis=0)) \
+                / (n0 + len(sel))
+            self.centroid_n[k] = n0 + len(sel)
+        if self.offloader is not None:
+            for i, c in enumerate(victims):
+                self.offloader.put(int(c), rows[i], efs[i])
+        self.evicted_tier[victims] = tier
+        self.client_of[slots_v] = -1
+        self.slot_of[victims] = -1
+        self.n_evictions += len(victims)
+
+    def _read_rows(self, pool, slots: np.ndarray) -> np.ndarray:
+        """f32 host copy of ``pool[slots]`` via a rung-padded jitted gather
+        (pow2 pad bounds the jit cache; never device_gets the whole pool)."""
+        k = len(slots)
+        idx = np.zeros(_pow2(max(k, 1)), np.int32)
+        idx[:k] = slots
+        return np.asarray(MESH.fetch_global(
+            self._gather(pool, jnp.asarray(idx))))[:k]
+
+    def _restore(self, clients: np.ndarray, slots: np.ndarray, t: int):
+        """Materialize rows for newly-resident clients: exact offloaded
+        copy > staleness-tier centroid > initial-model row."""
+        m = len(clients)
+        rows = np.empty((m, self.n_params), np.float32)
+        efs = np.zeros((m, self.ef_width), np.float32)
+        for i, c in enumerate(clients):
+            got = self.offloader.pop(int(c)) if self.offloader else None
+            if got is not None:
+                rows[i], efs[i] = got
+                self.n_restore_offload += 1
+            elif self.evicted_tier[c] >= 0:
+                rows[i] = self.centroids[self.evicted_tier[c]]
+                self.n_restore_centroid += 1
+            else:
+                rows[i] = self.init_row
+                self.n_restore_fresh += 1
+        pad = _pow2(max(m, 1))
+        idx = np.full(pad, self.capacity, np.int32)   # OOB pad: dropped
+        idx[:m] = slots
+        rpad = np.zeros((pad, self.n_params), np.float32)
+        rpad[:m] = rows
+        self.pool = self._scatter(self.pool, jnp.asarray(idx),
+                                  jnp.asarray(rpad))
+        if self.ef_width:
+            epad = np.zeros((pad, self.ef_width), np.float32)
+            epad[:m] = efs
+            self.ef_pool = self._scatter(self.ef_pool, jnp.asarray(idx),
+                                         jnp.asarray(epad))
+        self.slot_of[clients] = slots
+        self.client_of[slots] = clients
+
+    # -- checkpoint / introspection -----------------------------------------
+
+    def state_dict(self) -> dict:
+        """Flat dict-of-arrays pytree for `checkpoint.manager`. The pool is
+        cast to f32 (bf16 → f32 is lossless; npz has no bf16 dtype)."""
+        off_cids, off_rows = (self.offloader.export() if self.offloader
+                              else (np.empty(0, np.int64),
+                                    np.empty((0, self.n_params
+                                              + self.ef_width),
+                                             np.float32)))
+        return {
+            "pool": np.asarray(MESH.fetch_global(self._to_f32(self.pool))),
+            "ef_pool": np.asarray(MESH.fetch_global(self.ef_pool)),
+            "slot_of": self.slot_of.copy(),
+            "client_of": self.client_of.copy(),
+            "last_used": self.last_used.copy(),
+            "evicted_tier": self.evicted_tier.astype(np.int8).copy(),
+            "centroids": self.centroids.copy(),
+            "centroid_n": self.centroid_n.copy(),
+            "offload_clients": off_cids,
+            "offload_rows": off_rows,
+            "counters": np.array([self.n_evictions, self.n_grows,
+                                  self.n_restore_fresh,
+                                  self.n_restore_centroid,
+                                  self.n_restore_offload], np.int64),
+            "cap_per_shard": np.array([self.cap_per_shard], np.int64),
+        }
+
+    def load_state_dict(self, d: dict):
+        cap_per = int(np.asarray(d["cap_per_shard"])[0])
+        pool = np.asarray(d["pool"], np.float32)
+        if pool.shape != (cap_per * self.n_shards, self.n_params):
+            raise ValueError(f"pool shape {pool.shape} does not match "
+                             f"capacity {cap_per} × {self.n_shards} shards")
+        self.cap_per_shard = cap_per
+        self.pool = self._place(pool, P("data", None)).astype(self.dtype)
+        self.ef_pool = self._place(
+            np.asarray(d["ef_pool"], np.float32), P("data", None))
+        self.slot_of = np.asarray(d["slot_of"], np.int64).copy()
+        self.client_of = np.asarray(d["client_of"], np.int64).copy()
+        self.last_used = np.asarray(d["last_used"], np.int64).copy()
+        self.evicted_tier = np.asarray(d["evicted_tier"], np.int8).copy()
+        self.centroids = np.asarray(d["centroids"], np.float32).copy()
+        self.centroid_n = np.asarray(d["centroid_n"], np.int64).copy()
+        (self.n_evictions, self.n_grows, self.n_restore_fresh,
+         self.n_restore_centroid, self.n_restore_offload) = (
+            int(x) for x in np.asarray(d["counters"]))
+        if self.offloader is not None:
+            self.offloader.load(np.asarray(d["offload_clients"]),
+                                np.asarray(d["offload_rows"], np.float32))
+
+    def telemetry(self) -> dict:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return {
+            "capacity": self.capacity,
+            "resident": int((self.slot_of >= 0).sum()),
+            "ever_active": int((self.last_used > 0).sum()),
+            "registered": self.n_clients,
+            "evictions": self.n_evictions,
+            "grows": self.n_grows,
+            "restores": {"fresh": self.n_restore_fresh,
+                         "centroid": self.n_restore_centroid,
+                         "offload": self.n_restore_offload},
+            "offloaded": (len(self.offloader.row_of) if self.offloader
+                          else 0),
+            "pool_mb": self.capacity * (self.n_params * itemsize
+                                        + self.ef_width * 4) / 2**20,
+            "dense_mb": self.n_clients * (self.n_params * itemsize
+                                          + self.ef_width * 4) / 2**20,
+        }

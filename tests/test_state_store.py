@@ -1,0 +1,322 @@
+"""ClientStateStore (DESIGN.md §9): the sublinear client-state pool.
+
+Covers the ISSUE-7 contract:
+* grow-on-demand determinism (seeded property loops always run; the
+  hypothesis variants skip when hypothesis is absent, matching
+  test_compression.py's convention);
+* evict → re-activate parity: a re-activated client whose exact row was
+  dropped restores its staleness-tier centroid;
+* capacity-covers-all ⇒ BIT-identical same-seed trajectory vs the dense
+  buffer (state_capacity=0), and exact-paging parity under memmap offload;
+* checkpoint save/restore round-trip through CheckpointManager, including
+  the pool index (slot maps) and eviction metadata (tiers, centroids);
+* the stochastic-rounding bf16 scatter cast (unbiased, fixed points).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import compression as C
+from repro.core.caesar import CaesarConfig
+from repro.fl.simulation import ClientStateStore, SimConfig, Simulator
+
+N_PARAMS = 8
+
+
+def _mk_store(n_clients=16, n_params=N_PARAMS, **kw):
+    init = np.arange(n_params, dtype=np.float32)
+    return ClientStateStore(n_clients, n_params, init, **kw)
+
+
+def _row(store, client):
+    """f32 host copy of a resident client's pool row."""
+    slot = store.slot_of[client]
+    assert slot >= 0, f"client {client} not resident"
+    return store._read_rows(store.pool, np.array([slot]))[0]
+
+
+def _write_rows(store, clients, t, scale=100.0):
+    """Make ``clients`` resident and give each a distinguishable row."""
+    slots = store.prepare(np.asarray(clients), t)
+    rows = (np.asarray(clients, np.float32)[:, None] * scale
+            + np.arange(store.n_params, dtype=np.float32)[None, :])
+    store.adopt(store.pool.at[jnp.asarray(slots)].set(jnp.asarray(rows)),
+                store.ef_pool)
+    return rows
+
+
+def _replay(seq, **kw):
+    st = _mk_store(**kw)
+    outs = [st.prepare(np.asarray(parts), t).copy()
+            for t, parts in enumerate(seq, 1)]
+    return st, outs
+
+
+class TestGrowOnDemand:
+    def test_initial_capacity_tracks_cohort_not_registered(self):
+        st = _mk_store(n_clients=1024, cohort=4)
+        assert st.capacity == 16          # pow2(4 × cohort), not 1024
+        assert st.capacity * st.n_params * 4 < 1024 * st.n_params * 4
+
+    def test_growth_is_pow2_and_clamped(self):
+        st = _mk_store(n_clients=16, cohort=1)   # starts at 4
+        caps = {st.capacity}
+        for t in range(1, 5):
+            st.prepare(np.arange(t * 4), t)
+            caps.add(st.capacity)
+        assert st.slot_of.min() >= 0              # everyone resident
+        assert all(c & (c - 1) == 0 or c == 16 for c in caps)
+        assert st.capacity <= 16
+        assert st.n_evictions == 0                # growable never evicts
+        tel = st.telemetry()
+        assert tel["restores"] == {"fresh": 16, "centroid": 0, "offload": 0}
+
+    def test_slots_stable_across_growth(self):
+        st = _mk_store(n_clients=16, cohort=1)
+        st.prepare(np.array([3, 7]), 1)
+        before = {c: st.slot_of[c] for c in (3, 7)}
+        st.prepare(np.arange(16), 2)              # forces growth to 16
+        assert st.n_grows >= 1
+        for c, s in before.items():
+            assert st.slot_of[c] == s
+
+    def test_replay_determinism_seeded(self):
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            seq = [rng.choice(16, size=4, replace=False) for _ in range(8)]
+            s1, o1 = _replay(seq, cohort=4)
+            s2, o2 = _replay(seq, cohort=4)
+            for a, b in zip(o1, o2):
+                np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(s1.slot_of, s2.slot_of)
+            np.testing.assert_array_equal(s1.client_of, s2.client_of)
+            assert s1.capacity == s2.capacity
+
+    def test_replay_determinism_hypothesis(self):
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis "
+                                   "(seeded loops above always run)")
+        from hypothesis import given, settings
+        from hypothesis import strategies as hst
+
+        parts_st = hst.lists(
+            hst.lists(hst.integers(0, 15), min_size=1, max_size=6,
+                      unique=True),
+            min_size=1, max_size=10)
+
+        @settings(max_examples=50, deadline=None)
+        @given(parts_st)
+        def check(seq):
+            s1, o1 = _replay(seq, cohort=6)
+            s2, o2 = _replay(seq, cohort=6)
+            for a, b in zip(o1, o2):
+                np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(s1.slot_of, s2.slot_of)
+            assert s1.capacity == s2.capacity
+            # a resident client's slot is its only slot: the map and its
+            # inverse agree
+            res = np.flatnonzero(s1.slot_of >= 0)
+            np.testing.assert_array_equal(
+                s1.client_of[s1.slot_of[res]], res)
+
+        check()
+
+    def test_dense_mode_is_identity_mapping(self):
+        st = _mk_store(n_clients=16, capacity=0)
+        np.testing.assert_array_equal(st.slot_of, np.arange(16))
+        slots = st.prepare(np.array([5, 2, 11]), 1)
+        np.testing.assert_array_equal(slots, [5, 2, 11])
+        assert st.capacity == 16
+        np.testing.assert_allclose(_row(st, 9), np.arange(N_PARAMS))
+
+
+class TestEviction:
+    def test_capacity_must_cover_cohort(self):
+        with pytest.raises(ValueError):
+            _mk_store(n_clients=16, capacity=2, cohort=4)
+
+    def test_lru_coldest_evicted_first(self):
+        st = _mk_store(n_clients=16, capacity=4, cohort=2)
+        st.prepare(np.array([0, 1]), 1)
+        st.prepare(np.array([2, 3]), 5)
+        st.prepare(np.array([4, 5]), 6)     # evicts the t=1 pair
+        assert st.slot_of[0] < 0 and st.slot_of[1] < 0
+        assert st.slot_of[2] >= 0 and st.slot_of[3] >= 0
+        assert st.n_evictions == 2
+
+    def test_current_participants_never_evicted(self):
+        st = _mk_store(n_clients=16, capacity=4, cohort=4)
+        st.prepare(np.array([0, 1, 2, 3]), 1)
+        st.prepare(np.array([0, 1, 2, 8]), 2)   # 3 must go, never 0/1/2
+        assert st.slot_of[3] < 0
+        assert all(st.slot_of[c] >= 0 for c in (0, 1, 2, 8))
+
+    def test_reactivated_row_equals_cluster_centroid(self):
+        st = _mk_store(n_clients=16, capacity=4, cohort=4)
+        rows = _write_rows(st, [0, 1, 2, 3], t=1)
+        st.prepare(np.array([4, 5, 6, 7]), 10)  # evicts all of 0–3
+        assert (st.slot_of[:4] < 0).all()
+        # all four victims share the same log2-staleness tier (δ=9)
+        tier = int(st.evicted_tier[0])
+        assert tier == 3 and (st.evicted_tier[:4] == tier).all()
+        centroid = rows.mean(axis=0)
+        np.testing.assert_allclose(st.centroids[tier], centroid, rtol=1e-6)
+        st.prepare(np.array([0]), 11)           # re-activate from centroid
+        np.testing.assert_allclose(_row(st, 0), centroid, rtol=1e-6)
+        assert st.n_restore_centroid == 1
+
+    def test_offload_restores_exact_row(self, tmp_path):
+        for kind in ("host", "memmap"):
+            st = _mk_store(n_clients=16, capacity=4, cohort=4,
+                           offload=kind, offload_dir=str(tmp_path))
+            rows = _write_rows(st, [0, 1, 2, 3], t=1)
+            st.prepare(np.array([4, 5, 6, 7]), 10)
+            st.prepare(np.array([2]), 11)
+            np.testing.assert_array_equal(_row(st, 2), rows[2])
+            assert st.n_restore_offload == 1
+            # 0,1,3 still cold + the slot freed for 2 spilled a new victim
+            assert st.telemetry()["offloaded"] == 4
+
+
+class TestShardedSegments:
+    def test_slots_stay_in_owner_shard_segment(self):
+        st = _mk_store(n_clients=64, n_shards=4, cohort=4)
+        assert st.capacity < 64                   # sublinear to start
+        parts = np.array([0, 17, 34, 51])         # one per shard
+        slots = st.prepare(parts, 1)
+        np.testing.assert_array_equal(slots // st.cap_per_shard,
+                                      parts // st.rows_per_shard)
+        # growth remaps slot ids (slot = shard*cap_per + local) but keeps
+        # every client inside its owner shard's segment
+        st.prepare(np.arange(64), 2)
+        assert st.n_grows >= 1
+        res = np.flatnonzero(st.slot_of >= 0)
+        np.testing.assert_array_equal(
+            st.slot_of[res] // st.cap_per_shard, res // st.rows_per_shard)
+        np.testing.assert_array_equal(st.client_of[st.slot_of[res]], res)
+
+
+_cfg_kw = dict(dataset="har", rounds=6, n_clients=24, data_scale=0.25,
+               participation=0.25, seed=3, eval_every=2,
+               dataset_kwargs={"sep": 1.8, "noise": 2.0},
+               caesar=CaesarConfig(tau=3, b_max=8))
+
+
+@pytest.fixture(scope="module")
+def dense_history():
+    return Simulator(SimConfig(state_capacity=0, **_cfg_kw)).run()
+
+
+class TestPoolVsDenseParity:
+    """ISSUE-7 acceptance: slot indirection is numerically invisible —
+    whenever pool capacity covers every ever-participated client, the
+    same-seed trajectory is BIT-identical to the dense buffer's."""
+
+    def test_grow_on_demand_bit_identical(self, dense_history):
+        sim = Simulator(SimConfig(**_cfg_kw))     # default: grow on demand
+        h = sim.run()
+        assert h.accuracy == dense_history.accuracy
+        assert h.traffic_bits == dense_history.traffic_bits
+        tel = sim.store.telemetry()
+        assert tel["evictions"] == 0
+        assert tel["restores"]["centroid"] == 0
+
+    def test_memmap_offload_is_exact_paging(self, dense_history, tmp_path):
+        sim = Simulator(SimConfig(state_capacity=8, state_offload="memmap",
+                                  state_dir=str(tmp_path), **_cfg_kw))
+        h = sim.run()
+        assert sim.store.n_evictions > 0          # paging actually happened
+        assert h.accuracy == dense_history.accuracy
+        assert h.traffic_bits == dense_history.traffic_bits
+
+    def test_centroid_eviction_stays_finite(self):
+        sim = Simulator(SimConfig(state_capacity=8, **_cfg_kw))
+        h = sim.run()
+        tel = sim.store.telemetry()
+        assert tel["evictions"] > 0
+        assert tel["restores"]["centroid"] > 0
+        assert np.isfinite(h.accuracy[-1])
+        assert tel["capacity"] == 8 < tel["registered"]
+
+
+class TestCheckpointRoundTrip:
+    def test_state_dict_round_trips_with_eviction_metadata(self, tmp_path):
+        st = _mk_store(n_clients=16, capacity=4, cohort=4, offload="host")
+        _write_rows(st, [0, 1, 2, 3], t=1)
+        st.prepare(np.array([4, 5, 6, 7]), 10)    # evict + centroid fold
+        st.prepare(np.array([0, 2]), 11)          # offload restores
+        sd = st.state_dict()
+
+        mgr = CheckpointManager(tmp_path, keep=2)
+        mgr.save(sd, step=11)
+        like = {k: np.zeros_like(v) for k, v in sd.items()}
+        restored, step = mgr.restore_latest(like)
+        assert step == 11
+        # host-side template leaves stay numpy through the manager
+        assert isinstance(restored["slot_of"], np.ndarray)
+
+        st2 = _mk_store(n_clients=16, capacity=4, cohort=4, offload="host")
+        st2.load_state_dict(restored)
+        np.testing.assert_array_equal(st2.slot_of, st.slot_of)
+        np.testing.assert_array_equal(st2.client_of, st.client_of)
+        np.testing.assert_array_equal(st2.last_used, st.last_used)
+        np.testing.assert_array_equal(st2.evicted_tier, st.evicted_tier)
+        np.testing.assert_array_equal(st2.centroids, st.centroids)
+        np.testing.assert_array_equal(st2.centroid_n, st.centroid_n)
+        np.testing.assert_array_equal(np.asarray(st2.pool),
+                                      np.asarray(st.pool))
+        assert st2.n_evictions == st.n_evictions
+        assert sorted(st2.offloader.row_of) == sorted(st.offloader.row_of)
+        # the restored store keeps operating: client 1 is still cold and
+        # comes back bit-exact from its spilled row
+        assert st.slot_of[1] < 0
+        st2.prepare(np.array([1]), 12)
+        np.testing.assert_array_equal(
+            _row(st2, 1), 100.0 + np.arange(N_PARAMS, dtype=np.float32))
+
+    def test_bf16_pool_round_trips_losslessly(self, tmp_path):
+        st = _mk_store(n_clients=8, capacity=0, dtype=jnp.bfloat16)
+        sd = st.state_dict()
+        assert sd["pool"].dtype == np.float32     # serializable cast
+        st2 = _mk_store(n_clients=8, capacity=0, dtype=jnp.bfloat16)
+        st2.load_state_dict(sd)
+        assert st2.pool.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(st2.pool, np.float32), np.asarray(st.pool,
+                                                         np.float32))
+
+
+class TestStochasticRoundCast:
+    def test_f32_identity(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=64),
+                        jnp.float32)
+        out = C.stochastic_round_cast(x, jnp.float32,
+                                      jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+    def test_bf16_exact_values_are_fixed_points(self):
+        # exactly-representable values (incl. the masked-row rewrite path)
+        x = jnp.asarray(np.asarray(
+            np.array([0.0, 1.0, -2.5, 0.15625, 3.0e38],
+                     np.float32).astype(jnp.bfloat16)), jnp.float32)
+        for k in range(20):
+            out = C.stochastic_round_cast(x, jnp.bfloat16,
+                                          jax.random.PRNGKey(k))
+            np.testing.assert_array_equal(
+                np.asarray(out, np.float32), np.asarray(x, np.float32))
+
+    def test_bf16_unbiased_between_neighbours(self):
+        x = jnp.full((4096,), 1.0 + 1.0 / 3.0, jnp.float32)
+        lo = float(np.asarray(x[:1].astype(jnp.bfloat16), np.float32)[0])
+        outs = np.asarray(C.stochastic_round_cast(
+            x, jnp.bfloat16, jax.random.PRNGKey(7)), np.float32)
+        vals = np.unique(outs)
+        assert len(vals) == 2 and vals.min() <= 4.0 / 3.0 <= vals.max()
+        assert lo in vals
+        # E[SR(x)] = x: the empirical mean sits between the neighbours,
+        # far closer to x than RNE's deterministic pick
+        assert abs(outs.mean() - 4.0 / 3.0) < (vals.max() - vals.min()) / 8
+
