@@ -155,15 +155,20 @@ class LegacyEngine:
             parts, xs, ys = sim._prefetch_round(t)
             mu, bw_d, bw_u = sim.cap.snapshot(t)
             from repro.optim import sgd as SGD
-            lr = float(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
+            # keep lr a device scalar: float() here blocked on the (tiny)
+            # decay computation every round, a sync the timed loop never
+            # needed — the jitted step traces the scalar like any operand
+            lr = SGD.lr_at(cfg.sgd, jnp.float32(t - 1))
             plan = CA.plan_round(self.caesar_state, jnp.int32(t), ccfg,
                                  jnp.asarray(bw_d, jnp.float32),
                                  jnp.asarray(bw_u, jnp.float32),
                                  jnp.asarray(mu, jnp.float32),
                                  float(sim.model_bits))
-            theta_d = np.asarray(plan.theta_d)[parts]
-            theta_u = np.asarray(plan.theta_u)[parts]
-            batch = np.asarray(plan.batch)[parts]
+            # per-round plan syncs preserved verbatim: this loop IS the
+            # measured legacy baseline the fused engine is compared against
+            theta_d = np.asarray(plan.theta_d)[parts]  # repro: noqa=REP006
+            theta_u = np.asarray(plan.theta_u)[parts]  # repro: noqa=REP006
+            batch = np.asarray(plan.batch)[parts]  # repro: noqa=REP006
             taus = np.full(n_part, tau)
             ws, ims = sim._batch_masks(batch, taus, b_max, tau)
             lp_sel = jax.tree.map(lambda a: a[parts], local_p)
@@ -179,7 +184,9 @@ class LegacyEngine:
             mask = np.zeros(n, bool); mask[parts] = True
             self.caesar_state = CA.post_round(
                 self.caesar_state, jnp.asarray(mask), jnp.int32(t))
-            np.asarray(down_bits); np.asarray(up_bits)   # sync, as seed did
+            # deliberate sync, as the seed path did: the walls measure a
+            # completed round
+            np.asarray(down_bits); np.asarray(up_bits)  # repro: noqa=REP006
             walls.append(time.perf_counter() - w0)
         return walls, global_p
 

@@ -6,7 +6,6 @@ and saves the full result JSON under experiments/bench/.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 from pathlib import Path

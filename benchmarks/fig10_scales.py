@@ -389,12 +389,14 @@ def scale_bench(smoke: bool = False) -> dict:
                          f"traffic>{PARITY_TRAFFIC_TOL}): {bad}")
     # shape-explosion gate (same convention): a ragged point whose jit
     # cache exceeds the static lattice bound means tier shapes leaked
-    # round-dependence
-    blown = [_tag(p) for p in points if p.get("ragged", True)
-             and p["compiled_tier_shapes"] > p["shape_lattice_bound"]]
+    # round-dependence. Shared with `python -m repro.analysis` — the same
+    # contract check reads each point's telemetry dict.
+    from repro.analysis.contracts import check_tier_shapes
+    blown = [str(r) for p in points if p.get("ragged", True)
+             for r in [check_tier_shapes(p, _tag(p))] if not r.ok]
     if blown:
-        raise SystemExit(f"ragged jit cache exceeded the tier-lattice "
-                         f"bound at: {blown}")
+        raise SystemExit("ragged jit cache exceeded the tier-lattice "
+                         "bound: " + "; ".join(blown))
     # sublinear-state gate (DESIGN.md §9): peak RSS at 100k registered
     # clients must stay within REGISTERED_RSS_RATIO_MAX of the
     # same-active-cohort 10k control — superlinear growth means the store

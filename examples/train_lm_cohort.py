@@ -8,7 +8,6 @@ default overrides; push --steps a few hundred for a real run).
 """
 import argparse
 import dataclasses
-import sys
 import time
 
 import jax
@@ -17,6 +16,7 @@ import numpy as np
 
 import repro.configs as configs
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import rng as RNG
 from repro.fl import distributed as D
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
@@ -41,7 +41,7 @@ def main():
     mesh = make_local_mesh()
     dcfg = D.DistConfig(theta_d=0.3, theta_u=0.35, local_lr=3e-3,
                         use_error_feedback=True)
-    rng = np.random.default_rng(0)
+    rng = RNG.stream(0, RNG.KIND_DATASET)
     with jax.set_mesh(mesh):
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         state = D.init_state(params, dcfg, mesh)
@@ -62,7 +62,8 @@ def main():
         for t in range(start, args.steps):
             state, m = step_fn(state, batch_at(t))
             if t % 20 == 0 or t == args.steps - 1:
-                print(f"step {t:4d} loss={float(m['loss']):.4f} "
+                # logging boundary, cadence-limited to every 20 steps
+                print(f"step {t:4d} loss={float(m['loss']):.4f} "  # repro: noqa=REP006
                       f"({time.time()-t0:.0f}s)", flush=True)
             if (t + 1) % 100 == 0:
                 mgr.save(state, t + 1)

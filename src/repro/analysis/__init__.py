@@ -1,0 +1,15 @@
+"""Repo-specific static analysis + contract verification (DESIGN.md §10).
+
+Three layers, one CLI (``python -m repro.analysis``):
+
+* ``lint``      — AST rules REP001–REP008 encoding the invariants PRs 1–5
+                  paid to learn (SeedSequence streams, worker-thread
+                  hygiene, donation discipline, hot-loop syncs).
+* ``contracts`` — jaxpr/HLO assertions over the *real* traced round steps
+                  (no f64, donation actually aliased, compiled shapes
+                  within the tier lattice, no host callbacks).
+* ``ownership`` — an instrumented pipelined run asserting the documented
+                  thread-ownership handoffs (state store on main, ragged
+                  planning on the worker).
+"""
+from repro.analysis.lint import Diagnostic, run_lint  # noqa: F401

@@ -1,0 +1,76 @@
+"""``python -m repro.analysis`` — run the full invariant-checker suite.
+
+Layers (each skippable):
+
+* ``lint``       AST rules REP001–REP008 over src/ + benchmarks/ +
+                 examples/ (or explicit paths)
+* ``contracts``  jaxpr/HLO contracts on the real traced round engines and
+                 the Track B collective step
+* ``ownership``  instrumented pipelined run asserting thread ownership
+
+``--strict`` exits 1 on any diagnostic or failed contract (the CI gate);
+without it the suite reports and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.analysis.lint import run_lint
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+LAYERS = ("lint", "contracts", "ownership")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis + contract verification")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (CI gate)")
+    ap.add_argument("--skip", action="append", default=[], choices=LAYERS,
+                    help="skip a layer (repeatable)")
+    ap.add_argument("--no-track-b", action="store_true",
+                    help="skip the Track B trace inside contracts")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(__file__).resolve().parents[3]
+    failed = False
+
+    if "lint" not in args.skip:
+        paths = [pathlib.Path(p) for p in args.paths] if args.paths else \
+            [root / p for p in DEFAULT_PATHS if (root / p).exists()]
+        diags, n_suppressed = run_lint(paths, root=root)
+        for d in diags:
+            print(d)
+        print(f"[lint] {len(diags)} diagnostics, "
+              f"{n_suppressed} suppressed", file=sys.stderr)
+        failed |= bool(diags)
+
+    if "contracts" not in args.skip:
+        from repro.analysis.contracts import run_contracts
+        reports = run_contracts(track_b=not args.no_track_b)
+        for r in reports:
+            print(r)
+        failed |= not all(r.ok for r in reports)
+
+    if "ownership" not in args.skip:
+        from repro.analysis.ownership import run_ownership
+        reports = run_ownership()
+        for r in reports:
+            print(r)
+        failed |= not all(r.ok for r in reports)
+
+    if failed:
+        print("[analysis] FINDINGS" + (" (strict: exit 1)" if args.strict
+                                       else ""), file=sys.stderr)
+        return 1 if args.strict else 0
+    print("[analysis] clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

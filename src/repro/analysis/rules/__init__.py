@@ -1,0 +1,11 @@
+"""REPxxx rule registry (one module per invariant family)."""
+from repro.analysis.rules.hotloop import REP006
+from repro.analysis.rules.jaxsafe import REP004, REP005, REP007
+from repro.analysis.rules.rng import REP001, REP002
+from repro.analysis.rules.threads import REP003, REP008
+
+ALL_RULES = [REP001(), REP002(), REP003(), REP004(), REP005(), REP006(),
+             REP007(), REP008()]
+
+__all__ = ["ALL_RULES", "REP001", "REP002", "REP003", "REP004", "REP005",
+           "REP006", "REP007", "REP008"]

@@ -28,7 +28,6 @@ upload top-k), the (1−θ)·n largest stay full precision. θ=0 ⇒ lossless.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -1,0 +1,41 @@
+"""Named SeedSequence spawn-key streams — the repo's single RNG registry.
+
+Every host-side random draw hangs off ``SeedSequence(seed, spawn_key=(kind,
+*steps))`` with a *named* kind, so each consumer owns an independent stream
+keyed by (seed, kind, step...). Two invariants fall out of this, and the
+analysis suite (REP001/REP002, DESIGN.md §10) enforces them:
+
+* **No shared roots.** ``default_rng(seed)`` and ``SeedSequence(seed)``
+  collapse onto the same root stream for every caller handed the same
+  config seed — before PR 8 the dataset generator, the Dirichlet
+  partitioner and the capability hardware-tier draw all consumed that one
+  root stream (identical uniforms, in consumption order), silently
+  correlating data heterogeneity with device speed.
+* **No arithmetic seeds.** ``seed*CONST + t`` collides across (seed, t)
+  pairs — PR 3 replaced exactly that in CapabilityModel; the kinds below
+  are the registry that keeps new streams from re-colliding.
+
+Kinds 0–3 predate this module and their derivations are frozen: changing
+them would silently shift every recorded trajectory in BENCH_*.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+KIND_CAP_EPOCH = 0      # capability work-mode redraw, per epoch (PR 3)
+KIND_CAP_ROUND = 1      # capability bandwidth draw, per round (PR 3)
+KIND_SAMPLING = 2       # round participant + batch-index draw (PR 3)
+KIND_SR_SCATTER = 3     # stochastic-rounding scatter, per (round, chunk) (PR 5)
+KIND_CAP_TIER = 4       # persistent hardware tier, drawn once (PR 8)
+KIND_DATASET = 5        # synthetic dataset generation / token streams (PR 8)
+KIND_PARTITION = 6      # Dirichlet non-IID partition (PR 8)
+
+
+def sequence(seed: int, kind: int, *steps: int) -> np.random.SeedSequence:
+    """The (seed, kind, *steps) SeedSequence — stateless spawn-tree node."""
+    return np.random.SeedSequence(seed, spawn_key=(kind, *steps))
+
+
+def stream(seed: int, kind: int, *steps: int) -> np.random.Generator:
+    """An independent Generator for the (seed, kind, *steps) stream."""
+    return np.random.default_rng(sequence(seed, kind, *steps))

@@ -8,11 +8,15 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import rng as RNG
+
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, p: float,
                         seed: int = 0, min_per_client: int = 8):
     """Returns (client_indices: list[np.ndarray], label_dist [n,H], volumes [n])."""
-    rng = np.random.default_rng(seed)
+    # the simulator hands this the same cfg.seed the dataset generator gets;
+    # a root default_rng(seed) would alias that stream (REP001)
+    rng = RNG.stream(seed, RNG.KIND_PARTITION)
     n_classes = int(labels.max()) + 1
     idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
     for a in idx_by_class:

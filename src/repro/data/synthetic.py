@@ -10,6 +10,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import rng as RNG
+
 
 @dataclasses.dataclass
 class Dataset:
@@ -26,7 +28,10 @@ class Dataset:
 
 def _proto_mixture(n_train, n_test, shape, n_classes, seed, noise=1.0,
                    sep=2.0):
-    rng = np.random.default_rng(seed)
+    # own spawn-key stream: the raw seed is shared with the partitioner and
+    # the capability model, so a root default_rng(seed) here would replay
+    # the exact uniforms the other consumers draw (REP001)
+    rng = RNG.stream(seed, RNG.KIND_DATASET)
     dim = int(np.prod(shape))
     protos = rng.normal(size=(n_classes, dim)) * sep / np.sqrt(dim)
 
@@ -80,7 +85,7 @@ DATASETS = {"cifar10": cifar10_like, "har": har_like, "speech": speech_like,
 
 # --- Track-B token streams --------------------------------------------------
 
-def token_batch(rng: np.ndarray, batch: int, seq: int, vocab: int):
-    rs = np.random.default_rng(rng)
+def token_batch(rng: np.random.Generator, batch: int, seq: int, vocab: int):
+    rs = np.random.default_rng(rng)   # passthrough for an existing Generator
     toks = rs.integers(0, vocab, (batch, seq), dtype=np.int32)
     return {"tokens": toks, "labels": toks.copy()}

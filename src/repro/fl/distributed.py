@@ -228,7 +228,6 @@ def _cohort_round(params, prev, ef, batch, theta_d, theta_u,
 def make_train_step(cfg: ModelConfig, dcfg: DistConfig, mesh):
     """Builds the jit-able Caesar-round train_step(state, batch)."""
     has_pod = mesh is not None and "pod" in mesh.axis_names
-    pspecs = M.param_specs(cfg, mesh) if mesh is not None else None
     backend = C.resolve_backend(dcfg.backend)   # once per step build
 
     def train_step(state: TrainState, batch):

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import batchsize as BS
 from repro.core import caesar as CA
 from repro.core import compression as C
+from repro.core import rng as RNG
 from repro.data import partition, synthetic
 from repro.fl import baselines as BL
 from repro.fl.capability import CapabilityModel
@@ -313,11 +314,10 @@ class Simulator:
 
     def _round_rng(self, t: int) -> np.random.Generator:
         """Deterministic per-round stream: SeedSequence(seed, (2, t)).
-        Spawn-key kinds 0/1 belong to CapabilityModel's per-epoch/per-round
-        streams; 2 is the round's sampling stream (3 the executor's
-        stochastic-rounding stream)."""
-        return np.random.default_rng(
-            np.random.SeedSequence(self.cfg.seed, spawn_key=(2, t)))
+        Spawn-key kinds are named in ``repro.core.rng`` — 0/1 belong to
+        CapabilityModel, 2 is the round's sampling stream, 3 the executor's
+        stochastic-rounding stream."""
+        return RNG.stream(self.cfg.seed, RNG.KIND_SAMPLING, t)
 
     def _select_participants(self, rng: np.random.Generator) -> np.ndarray:
         """Uniform draw; stratified per shard in sharded mode (each device
@@ -453,7 +453,6 @@ class Simulator:
         feat = xtr.shape[1:]
         tiers, off = [], 0
         for (b_t, tau_t, pos), (g_pad, slices) in zip(groups, layouts):
-            g = len(pos)
             rows = g_pad * tau_t * b_t
             xv = xflat[off:off + rows]
             yv = yflat[off:off + rows]
@@ -588,9 +587,11 @@ class Simulator:
                 self.planner.observe(t, parts, gnorms)
 
                 # --- accounting ---
-                # traffic: actual hybrid/top-k payload bits on the wire
-                down_b = np.asarray(down_bits, np.float64)
-                up_b = np.asarray(up_bits, np.float64)
+                # traffic: actual hybrid/top-k payload bits on the wire.
+                # THE documented per-round sync point: blocking on the step
+                # outputs here is what makes wall_per_round honest
+                down_b = np.asarray(down_bits, np.float64)  # repro: noqa=REP006
+                up_b = np.asarray(up_bits, np.float64)  # repro: noqa=REP006
                 cum_bits += float(down_b.sum() + up_b.sum())
                 # time + barrier waiting: the Eq.-7 θ·Q/β model — the SAME
                 # model optimize_batch_sizes equalizes (core/batchsize.py),
@@ -614,7 +615,8 @@ class Simulator:
 
                 if t % cfg.eval_every == 0 or t == cfg.rounds:
                     ne = min(cfg.eval_samples, len(self.data.y_test))
-                    acc = float(self._eval(global_f,
+                    # eval boundary, cadence-limited by cfg.eval_every
+                    acc = float(self._eval(global_f,  # repro: noqa=REP006
                                            jnp.asarray(self.data.x_test[:ne]),
                                            jnp.asarray(self.data.y_test[:ne])))
                     hist.rounds.append(t)

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import batchsize as BS
 from repro.core import compression as C
+from repro.core import rng as RNG
 from repro.launch import mesh as MESH
 
 BUFFER_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
@@ -193,11 +194,12 @@ class RoundExecutor:
     # -- RNG for the stochastic-rounding scatter ----------------------------
 
     def _round_seed(self, t: int, i: int = 0) -> np.uint32:
-        """Per-(round, tier-chunk-call) SR seed. Spawn-key kind 3; kinds
-        0/1 are the capability streams, 2 the round sampling stream — all
-        hang off the same root seed, none collide."""
-        return np.random.SeedSequence(
-            self.cfg.seed, spawn_key=(3, t, i)).generate_state(1)[0]
+        """Per-(round, tier-chunk-call) SR seed. Spawn-key kind 3
+        (repro.core.rng names the full registry); kinds 0/1 are the
+        capability streams, 2 the round sampling stream — all hang off
+        the same root seed, none collide."""
+        return RNG.sequence(
+            self.cfg.seed, RNG.KIND_SR_SCATTER, t, i).generate_state(1)[0]
 
     def _store_cast(self, x, key):
         """f32 → storage dtype for the pool scatter. SR when enabled;

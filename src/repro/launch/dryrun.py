@@ -20,8 +20,7 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 import repro.configs as configs
 from repro.fl import distributed as D

@@ -11,9 +11,8 @@ long_500k for full-attention archs (needs sub-quadratic mixing).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

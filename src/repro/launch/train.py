@@ -20,6 +20,7 @@ import numpy as np
 
 import repro.configs as configs
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import rng as RNG
 from repro.core import staleness as ST
 from repro.fl import distributed as D
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -73,7 +74,7 @@ def main():
                         local_lr=args.lr,
                         use_error_feedback=args.error_feedback)
 
-    rng = np.random.default_rng(args.seed)
+    rng = RNG.stream(args.seed, RNG.KIND_DATASET)
     with jax.set_mesh(mesh):
         params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
         state = D.init_state(params, dcfg, mesh)
@@ -87,18 +88,24 @@ def main():
                 state, start = got
                 print(f"[train] resumed from checkpoint step {start}")
 
+        # Caesar round plan: staleness of the cohort grows when it skips
+        # rounds; here the single cohort participates every round ⇒ Eq.3
+        # with δ=1 after warmup. Precomputed in one shot: the former
+        # per-step float(download_ratio(...)) blocked the loop on a jitted
+        # scalar every round (REP006).
+        ts = jnp.maximum(jnp.arange(max(args.steps, 1), dtype=jnp.int32), 1)
+        td_sched = np.asarray(jax.vmap(
+            lambda tt: ST.download_ratio(jnp.int32(1), tt,
+                                         args.theta_d_max))(ts))
         for t in range(start, args.steps):
-            # Caesar round plan: staleness of the cohort grows when it skips
-            # rounds; here the single cohort participates every round ⇒ Eq.3
-            # with δ=1 after warmup.
-            theta_d = float(ST.download_ratio(
-                jnp.int32(1), jnp.int32(max(t, 1)), args.theta_d_max))
-            state = dataclasses.replace(
-                state, theta_d=jnp.float32(theta_d if t > 0 else 0.0))
+            theta_d = float(td_sched[t]) if t > 0 else 0.0
+            state = dataclasses.replace(state, theta_d=jnp.float32(theta_d))
             batch = make_batch(rng, cfg, args.batch, args.seq)
             t0 = time.time()
             state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
+            # per-step loss print is the point of this launcher; the sync
+            # is the logging cadence, not an accident
+            loss = float(metrics["loss"])  # repro: noqa=REP006
             print(f"[train] step {t:4d} loss={loss:.4f} θ_d={theta_d:.3f} "
                   f"θ_u={args.theta_u} ({time.time()-t0:.2f}s)", flush=True)
             if mgr and (t + 1) % args.ckpt_every == 0:

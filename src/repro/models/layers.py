@@ -6,7 +6,6 @@ kernel in kernels/flash_attention.py covers the single-token decode hot path.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ interleave) are segmented into homogeneous scans.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -562,7 +562,6 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Any:
         ssm, conv = M2.init_mamba_cache(batch, cfg, dt)
         n = cfg.n_layers
         n_shared = len(_hybrid_segments(cfg))
-        d2 = 2 * cfg.d_model
         return {"ssm": jnp.broadcast_to(ssm, (n,) + ssm.shape),
                 "conv": jnp.broadcast_to(conv, (n,) + conv.shape),
                 "shared": {"k": jnp.zeros((n_shared, batch, seq, cfg.n_kv_heads,
@@ -575,7 +574,6 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Any:
 def decode_step(params, cache, batch, length, cfg: ModelConfig, mesh=None):
     """One token for every sequence. batch {"tokens": [B,1]}; length [B]."""
     x = embed_lookup(params["embed"], batch["tokens"], cfg, mesh)
-    b = x.shape[0]
     positions = length[:, None]
     fam = cfg.family
 

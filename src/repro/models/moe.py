@@ -13,7 +13,6 @@ argsorted by expert id, ranked within their expert, and scattered into an
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

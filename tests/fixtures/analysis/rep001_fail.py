@@ -1,0 +1,15 @@
+"""Must-fail fixture for REP001: every host-RNG anti-pattern."""
+import random
+
+import numpy as np
+
+
+def sample(seed):
+    np.random.seed(seed)                    # singleton reseed
+    x = random.random()                     # stdlib module state
+    r = np.random.default_rng(seed)         # root stream off a seed name
+    ss = np.random.SeedSequence(seed)       # root SeedSequence
+    g = np.random.default_rng(0)            # literal root stream
+    legacy = np.random.RandomState(7)       # legacy singleton API
+    e = np.random.default_rng()             # OS entropy
+    return x, r, ss, g, legacy, e

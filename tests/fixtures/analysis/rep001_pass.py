@@ -1,0 +1,12 @@
+"""Must-pass twin for REP001: spawn-keyed streams and passthroughs."""
+import numpy as np
+
+from repro.core import rng as RNG
+
+
+def sample(seed, t, gen):
+    r = RNG.stream(seed, RNG.KIND_SAMPLING, t)
+    keyed = np.random.SeedSequence(seed, spawn_key=(RNG.KIND_SAMPLING, t))
+    g = np.random.default_rng(keyed)
+    passthrough = np.random.default_rng(gen)
+    return r, g, passthrough

@@ -1,0 +1,9 @@
+"""Must-fail fixture for REP002: arithmetic seed derivation."""
+import numpy as np
+
+
+def round_rng(seed, t):
+    derived = seed * 1000 + t
+    a = np.random.default_rng(derived)
+    b = np.random.default_rng(seed + t)
+    return a, b

@@ -1,0 +1,7 @@
+"""Must-pass twin for REP002: spawn-key keyed per-round stream."""
+import numpy as np
+
+
+def round_rng(seed, t):
+    return np.random.default_rng(
+        np.random.SeedSequence(seed, spawn_key=(2, t)))

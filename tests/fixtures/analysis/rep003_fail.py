@@ -1,0 +1,12 @@
+"""Must-fail fixture for REP003: device op in the worker call graph."""
+import jax.numpy as jnp
+import numpy as np
+
+
+class Driver:
+    def _prefetch_pkg(self, t, bufs):
+        xs = self._gather(t)
+        return jnp.asarray(xs)
+
+    def _gather(self, t):
+        return np.zeros((4, 4), np.float32)

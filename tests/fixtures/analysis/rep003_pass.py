@@ -1,0 +1,13 @@
+"""Must-pass twin for REP003: pure-numpy producer; cross-module plan
+call (self.planner.plan) is the planner's contract, not this module's."""
+import numpy as np
+
+
+class Driver:
+    def _prefetch_pkg(self, t, bufs):
+        xs = self._gather(t)
+        plan = self.planner.plan(t, xs)
+        return xs, plan
+
+    def _gather(self, t):
+        return np.zeros((4, 4), np.float32)

@@ -1,0 +1,8 @@
+"""Must-fail fixture for REP004: donated buffer read after the call."""
+
+
+class Runner:
+    def run(self, global_f, pool, ef, xs):
+        new_f, out = self._round_step(global_f, pool, ef, xs)
+        bits = pool.sum()
+        return new_f, out, bits

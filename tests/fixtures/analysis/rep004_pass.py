@@ -1,0 +1,8 @@
+"""Must-pass twin for REP004: the donating call rebinds its operands."""
+
+
+class Runner:
+    def run(self, global_f, pool, ef, xs):
+        global_f, pool, ef = self._round_step(global_f, pool, ef, xs)
+        bits = pool.sum()
+        return global_f, bits

@@ -1,0 +1,8 @@
+"""Must-fail fixture for REP005 (linted under a repro/core/ path)."""
+import numpy as np
+
+
+def make_buffers():
+    scale = np.array([1.0, 2.0])
+    acc = np.float64(0.0)
+    return scale, acc

@@ -1,0 +1,8 @@
+"""Must-pass twin for REP005: dtypes spelled out."""
+import numpy as np
+
+
+def make_buffers():
+    scale = np.array([1.0, 2.0], dtype=np.float32)
+    acc = np.float32(0.0)
+    return scale, acc

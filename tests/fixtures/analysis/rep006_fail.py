@@ -1,0 +1,10 @@
+"""Must-fail fixture for REP006: per-round sync on a device value."""
+
+
+class Runner:
+    def run(self, rounds, global_f, store, parts, xs):
+        losses = []
+        for t in range(rounds):
+            global_f, bits = self.step(t, global_f, store, parts, xs)
+            losses.append(float(bits))
+        return losses

@@ -1,0 +1,11 @@
+"""Must-pass twin for REP006: device values collected async, synced
+once after the loop."""
+
+
+class Runner:
+    def run(self, rounds, global_f, store, parts, xs):
+        outs = []
+        for t in range(rounds):
+            global_f, bits = self.step(t, global_f, store, parts, xs)
+            outs.append(bits)
+        return [float(b) for b in outs]

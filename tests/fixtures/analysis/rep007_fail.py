@@ -1,0 +1,10 @@
+"""Must-fail fixture for REP007: wall clock traced into jitted code."""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    t0 = time.time()
+    return x * 2, t0

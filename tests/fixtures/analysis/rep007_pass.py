@@ -1,0 +1,15 @@
+"""Must-pass twin for REP007: timing stays on the host side."""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    return x * 2
+
+
+def run(x):
+    t0 = time.perf_counter()
+    y = step(x)
+    return y, time.perf_counter() - t0

@@ -1,0 +1,8 @@
+"""Must-fail fixture for REP008: store mutation in the worker graph."""
+
+
+class Driver:
+    def _prefetch_pkg(self, t, bufs):
+        slots = self.store.prepare(bufs["parts"], t)
+        self.store.last_used = t
+        return slots

@@ -1,0 +1,13 @@
+"""Must-pass twin for REP008: store calls stay on the main thread."""
+
+
+class Driver:
+    def _prefetch_pkg(self, t, bufs):
+        return self._gather(t, bufs)
+
+    def _gather(self, t, bufs):
+        return bufs[t % 2]
+
+    def run(self, store, parts, t):
+        slots = store.prepare(parts, t)
+        return slots

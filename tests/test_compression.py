@@ -9,8 +9,7 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+from hypothesis import given
 
 from repro.core import compression as C
 

@@ -1,5 +1,4 @@
 """FL substrate integration tests: Track-A simulator, partitioner, capability."""
-import dataclasses
 
 import numpy as np
 import pytest

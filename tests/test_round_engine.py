@@ -6,7 +6,6 @@ setting. A subprocess test exercises a real 4-device shard_map placement via
 xla_force_host_platform_device_count (jax locks the device count at first
 init, so it needs a fresh interpreter).
 """
-import json
 import os
 import subprocess
 import sys
