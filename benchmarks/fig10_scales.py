@@ -72,6 +72,7 @@ def run_point(n_clients: int, chunk_size, rounds: int,
               chunk_budget_mb: float = 1024.0,
               ragged: bool = True, buffer_dtype: str = "float32",
               state_capacity=None, state_offload: str = "none",
+              measure_eviction_error: bool = False,
               compare_pipeline: bool = False) -> dict:
     """One scale point, measured in THIS process (run it in a fresh
     subprocess for a clean ru_maxrss high-water mark). Evaluates EVERY
@@ -104,6 +105,7 @@ def run_point(n_clients: int, chunk_size, rounds: int,
                          ragged=ragged, buffer_dtype=buffer_dtype,
                          state_capacity=state_capacity,
                          state_offload=state_offload,
+                         measure_eviction_error=measure_eviction_error,
                          pipelined=pipe, sharded=sharded)
 
     def median_warm(h):
@@ -227,6 +229,8 @@ def _tag(p: dict) -> str:
             + ("/masked" if not p.get("ragged", True) else "")
             + ("/bf16" if p.get("buffer_dtype") == "bfloat16" else "")
             + ("/dense-state" if p.get("state_capacity") == 0 else "")
+            + (f"/cap{p['state_capacity']}" if p.get("state_capacity")
+               else "")
             + (f"/{p['state_offload']}"
                if p.get("state_offload", "none") != "none" else "")
             + ("/sharded" if p["sharded"] else ""))
@@ -250,7 +254,14 @@ def scale_bench(smoke: bool = False) -> dict:
         reg_points, results["registered_scale"] = _registered_points(
             dict(dataset="oppo_ts", rounds=3, data_scale=0.05, tau=1,
                  chunk_size=None))
-        points = [pipelined, explicit, masked, dense_state, *reg_points]
+        # capped store under eviction pressure with the shadow-row probe
+        # on: surfaces the ‖restored − true‖/‖true‖ centroid-approximation
+        # telemetry (DESIGN.md §9) — a report, not a gate
+        capped = _subprocess_point(chunk_size=None, state_capacity=16,
+                                   measure_eviction_error=True, **base)
+        results["eviction_error"] = capped["store"].get("restore_error")
+        points = [pipelined, explicit, masked, dense_state, capped,
+                  *reg_points]
         results["parity_pipelined_vs_sync"] = pipelined["pipeline_parity"]
         results["parity_auto_vs_explicit"] = _parity(pipelined, explicit)
         # the ragged-vs-masked gate (DESIGN.md §8): same plan, same sample

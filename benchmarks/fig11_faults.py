@@ -1,0 +1,295 @@
+"""Fault tolerance of the wire-boundary engine (DESIGN.md §11).
+
+Two studies:
+
+* **fault grid** — dropout {0, 10, 30%} × Byzantine sign-flip {0, 10, 20%}
+  × aggregator {mean, trimmed_mean, norm_clip}, every run through the
+  serialized loopback wire. Emits ``BENCH_faults.json`` with full accuracy
+  trajectories, modeled + measured (wire) traffic, and per-run fault
+  totals from the simulator's fault log. The headline claim it documents:
+  under a 10% sign-flip adversary plain mean collapses while trimmed-mean
+  and norm-clip stay at (or above) mean's fault-free accuracy.
+* **queue-transport load generator** — N producer processes encode
+  realistic top-k uploads into a multiprocessing queue; the server drains
+  and runs the fig-11 hot loop (``robust.decode_and_aggregate``: decode +
+  CRC check + densify + chunked mean fold). Reports end-to-end and
+  server-side uploads/s + MB/s.
+
+``--smoke`` is the CI gate (tiny config, seconds): (a) a zero-fault
+loopback run must be BIT-IDENTICAL to the in-process engine — accuracy
+series, traffic accounting and the final global vector; (b) trimmed-mean
+must neutralize a 10% sign-flip attack that measurably degrades plain
+mean. Writes ``BENCH_faults_smoke.json`` (gitignored); the committed
+``BENCH_faults.json`` comes from a full run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DROPOUTS = [0.0, 0.1, 0.3]
+BYZANTINE = [0.0, 0.1, 0.2]
+AGGREGATORS = ["mean", "trimmed_mean", "norm_clip"]
+ATTACK_SCALE = 10.0
+
+# smoke gates, in PARAMETER space (the tiny config's 50-sample accuracy
+# is too noisy to rank aggregators): relative to the fault-free global,
+# the attacked-mean model must deviate by at least MEAN_DEVIATION_MIN
+# while trimmed-mean stays under ROBUST_DEVIATION_MAX — and trimmed-mean
+# must not give up accuracy vs the fault-free run
+MEAN_DEVIATION_MIN = 1.0
+ROBUST_DEVIATION_MAX = 0.8
+ROBUST_ACC_TOL = 0.02
+
+
+def _sim_cfg(smoke: bool, wire: str = "loopback",
+             aggregation: str = "mean", faults=None, seed: int = 0):
+    from repro.core.caesar import CaesarConfig
+    from repro.fl import faults as F
+    from repro.fl.simulation import SimConfig
+    if smoke:
+        base = dict(dataset="oppo_ts", rounds=8, n_clients=12,
+                    data_scale=0.01, eval_every=4, participation=0.5,
+                    dataset_kwargs={"n_features": 64},
+                    caesar=CaesarConfig(tau=2, b_max=8,
+                                        use_error_feedback=True))
+    else:
+        base = dict(dataset="har", rounds=15, n_clients=30,
+                    data_scale=0.05, eval_every=5, participation=0.2,
+                    caesar=CaesarConfig(tau=3, b_max=16,
+                                        use_error_feedback=True))
+    return SimConfig(seed=seed, wire=wire, aggregation=aggregation,
+                     faults=faults or F.FaultConfig(), **base)
+
+
+def run_point(smoke: bool, dropout: float, byz: float, aggregation: str,
+              seed: int = 0, log=lambda s: None) -> dict:
+    from repro.fl import faults as F
+    from repro.fl.simulation import Simulator
+    fc = F.FaultConfig(dropout_rate=dropout, byzantine_frac=byz,
+                       attack="sign_flip", attack_scale=ATTACK_SCALE)
+    sim = Simulator(_sim_cfg(smoke, aggregation=aggregation, faults=fc,
+                             seed=seed))
+    t0 = time.perf_counter()
+    h = sim.run(log=log)
+    wall = time.perf_counter() - t0
+    status = np.concatenate([e["status"] for e in sim.fault_log])
+    return {
+        "dropout": dropout, "byzantine": byz, "aggregation": aggregation,
+        "accuracy": h.accuracy, "final_acc": h.accuracy[-1],
+        "traffic_gb": h.traffic_bits[-1] / 8e9,
+        "wire_mb": h.wire_bits[-1] / 8e6 if h.wire_bits else 0.0,
+        "time_s": h.sim_time[-1],
+        "n_uploads": int(np.sum(status != F.DROP)),
+        "n_dropped": int(np.sum(status == F.DROP)),
+        "n_byzantine": int(sum(e["byz"].sum() for e in sim.fault_log)),
+        "n_crc_dropped": int(sum(e["n_crc_dropped"]
+                                 for e in sim.fault_log)),
+        "wall_s": wall,
+    }
+
+
+# ---------------------------------------------------------------------------
+# queue-transport load generator
+# ---------------------------------------------------------------------------
+
+def _producer(queue, producer_id: int, n_uploads: int, n_params: int,
+              k: int):
+    """One producer process: encode + push ``n_uploads`` realistic top-k
+    payloads. Top-level so multiprocessing's spawn can import it; only
+    touches numpy-side modules (no jax in the producers)."""
+    from repro.core import rng as RNG
+    from repro.fl import wire as W
+    rng = RNG.stream(1234, RNG.KIND_FAULTS, 0, producer_id)
+    for i in range(n_uploads):
+        idx = rng.choice(n_params, size=k, replace=False).astype(np.int64)
+        vals = rng.normal(0.0, 1e-2, size=k).astype(np.float32)
+        queue.put(W.encode_upload(idx, vals, client=producer_id,
+                                  round_=i, n_params=n_params))
+
+
+def queue_throughput(n_producers: int = 3, uploads_per_producer: int = 32,
+                     n_params: int = 1 << 17, topk_frac: float = 0.01
+                     ) -> dict:
+    """Hammer the server's decode+aggregate hot loop through a REAL
+    multiprocessing queue. End-to-end rate includes producer encode +
+    queue transit; the server-side rate times only drain-to-aggregate."""
+    import multiprocessing as mp
+
+    from repro.fl import robust as RB
+    from repro.fl import wire as W
+    k = max(1, int(round(topk_frac * n_params)))
+    ctx = mp.get_context("spawn")
+    tr = W.QueueTransport(ctx=ctx)
+    total = n_producers * uploads_per_producer
+    procs = [ctx.Process(target=_producer,
+                         args=(tr.queue, i, uploads_per_producer,
+                               n_params, k))
+             for i in range(n_producers)]
+    t0 = time.perf_counter()
+    for p in procs:
+        p.start()
+    payloads = tr.drain(total, timeout=300)
+    t_drained = time.perf_counter()
+    delta, n_ok, n_bad = RB.decode_and_aggregate(payloads, n_params)
+    np.asarray(delta)
+    t_done = time.perf_counter()
+    for p in procs:
+        p.join()
+    tr.close()
+    nbytes = sum(len(p) for p in payloads)
+    assert n_ok == total and n_bad == 0, (n_ok, n_bad, total)
+    server_s = t_done - t_drained
+    e2e_s = t_done - t0
+    return {
+        "n_producers": n_producers, "uploads": total,
+        "n_params": n_params, "k": k,
+        "payload_bytes": W.payload_nbytes(n_params, k),
+        "total_mb": nbytes / 2 ** 20,
+        "server_decode_agg_s": server_s,
+        "server_uploads_per_s": total / max(server_s, 1e-9),
+        "server_mb_per_s": nbytes / 2 ** 20 / max(server_s, 1e-9),
+        "e2e_s": e2e_s,
+        "e2e_uploads_per_s": total / max(e2e_s, 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# smoke gates (CI)
+# ---------------------------------------------------------------------------
+
+def smoke_bit_identity() -> dict:
+    """Gate (a): zero faults through the serialized loopback wire must be
+    bit-identical to the in-process engine."""
+    from repro.fl.simulation import Simulator
+    s0 = Simulator(_sim_cfg(True, wire="inproc"))
+    h0 = s0.run()
+    s1 = Simulator(_sim_cfg(True, wire="loopback"))
+    h1 = s1.run()
+    ok = (h0.accuracy == h1.accuracy
+          and h0.traffic_bits == h1.traffic_bits
+          and h0.sim_time == h1.sim_time
+          and np.array_equal(np.asarray(s0.global_flat),
+                             np.asarray(s1.global_flat)))
+    return {"ok": bool(ok), "accuracy_inproc": h0.accuracy,
+            "accuracy_loopback": h1.accuracy,
+            "wire_mb": h1.wire_bits[-1] / 8e6}
+
+
+def smoke_robust_aggregation() -> dict:
+    """Gate (b): a 10% sign-flip adversary must yank the plain-mean model
+    far from the fault-free trajectory, while trimmed-mean stays close to
+    it AND holds the fault-free accuracy."""
+    from repro.fl import faults as F
+    from repro.fl.simulation import Simulator
+
+    def final(aggregation, byz):
+        fc = F.FaultConfig(byzantine_frac=byz, attack="sign_flip",
+                           attack_scale=ATTACK_SCALE)
+        sim = Simulator(_sim_cfg(True, aggregation=aggregation, faults=fc))
+        h = sim.run()
+        return np.asarray(sim.global_flat), h.accuracy[-1]
+
+    g_clean, acc_clean = final("mean", 0.0)
+    g_mean, acc_mean = final("mean", 0.1)
+    g_trim, acc_trim = final("trimmed_mean", 0.1)
+    ref = float(np.linalg.norm(g_clean))
+    dev_mean = float(np.linalg.norm(g_mean - g_clean)) / ref
+    dev_trim = float(np.linalg.norm(g_trim - g_clean)) / ref
+    return {"ok": bool(dev_mean >= MEAN_DEVIATION_MIN
+                       and dev_trim <= ROBUST_DEVIATION_MAX
+                       and acc_trim >= acc_clean - ROBUST_ACC_TOL),
+            "mean_clean_acc": acc_clean,
+            "mean_attacked_acc": acc_mean,
+            "trimmed_attacked_acc": acc_trim,
+            "mean_deviation": dev_mean,
+            "trimmed_deviation": dev_trim}
+
+
+# ---------------------------------------------------------------------------
+
+def fault_bench(smoke: bool = False) -> dict:
+    results: dict = {"config": {"smoke": smoke,
+                                "attack": "sign_flip",
+                                "attack_scale": ATTACK_SCALE}}
+    if smoke:
+        results["bit_identity"] = smoke_bit_identity()
+        results["robust_aggregation"] = smoke_robust_aggregation()
+        results["queue_throughput"] = queue_throughput(
+            n_producers=2, uploads_per_producer=8, n_params=1 << 14)
+        points = []
+    else:
+        points = []
+        for agg in AGGREGATORS:
+            for dr in DROPOUTS:
+                for bz in BYZANTINE:
+                    p = run_point(False, dr, bz, agg)
+                    tag = f"{agg}/drop{dr:g}/byz{bz:g}"
+                    print(f"fig11_faults/{tag},{p['wall_s'] * 1e6 / 15:.0f},"
+                          f"acc={p['final_acc']:.3f};"
+                          f"wire_mb={p['wire_mb']:.1f};"
+                          f"dropped={p['n_dropped']};byz={p['n_byzantine']}")
+                    points.append(p)
+        results["queue_throughput"] = queue_throughput()
+        # the headline cells: does robust aggregation recover what the
+        # adversary costs plain mean?
+        def cell(agg, dr, bz):
+            return next(p for p in points if p["aggregation"] == agg
+                        and p["dropout"] == dr and p["byzantine"] == bz)
+        base = cell("mean", 0.0, 0.0)["final_acc"]
+        results["headline"] = {
+            "mean_clean": base,
+            "mean_byz10": cell("mean", 0.0, 0.1)["final_acc"],
+            "trimmed_byz10": cell("trimmed_mean", 0.0, 0.1)["final_acc"],
+            "norm_clip_byz10": cell("norm_clip", 0.0, 0.1)["final_acc"],
+        }
+    results["points"] = points
+    payload = json.dumps(results, indent=1, default=float)
+    name = "BENCH_faults_smoke.json" if smoke else "BENCH_faults.json"
+    (ROOT / name).write_text(payload)
+    out2 = ROOT / "experiments" / "bench"
+    out2.mkdir(parents=True, exist_ok=True)
+    (out2 / name).write_text(payload)
+    print(f"wrote {name}")
+    if smoke:
+        # gates AFTER the JSON write, so measurements survive a failure
+        bi = results["bit_identity"]
+        if not bi["ok"]:
+            raise SystemExit(f"zero-fault loopback is NOT bit-identical "
+                             f"to the in-process engine: {bi}")
+        ra = results["robust_aggregation"]
+        if not ra["ok"]:
+            raise SystemExit(
+                "robust-aggregation gate failed (10% sign-flip must push "
+                f"plain mean >= {MEAN_DEVIATION_MIN} relative deviation "
+                f"while trimmed-mean stays <= {ROBUST_DEVIATION_MAX} and "
+                f"holds fault-free accuracy): {ra}")
+        print(f"[gate] bit-identity OK; mean deviated "
+              f"{ra['mean_deviation']:.2f} under attack, trimmed "
+              f"{ra['trimmed_deviation']:.2f} at acc "
+              f"{ra['trimmed_attacked_acc']:.3f} "
+              f"(clean {ra['mean_clean_acc']:.3f})")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: bit-identity + robust-aggregation "
+                         "checks on a tiny config")
+    args = ap.parse_args()
+    fault_bench(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()
+
+
+# the queue producers re-import this module under spawn; keep module-level
+# work above limited to constants so that import stays cheap

@@ -188,12 +188,22 @@ def verify_round_engine(ragged: bool, **overrides) -> list:
     ex = sim.executor
     caps = {}
     if ragged:
-        caps["tier_chunk"] = ex._tier_chunk = _Capture(ex._tier_chunk)
+        # unsharded ragged rounds run the deferred kernel + the
+        # association-fixed fold (shared with the wire replay) — the
+        # fused tier_chunk only exists on the sharded path
+        caps["tier_chunk_defer"] = ex._tier_chunk_defer = \
+            _Capture(ex._tier_chunk_defer)
+        caps["fold"] = ex._fold = _Capture(ex._fold)
         caps["finalize"] = ex._finalize = _Capture(ex._finalize)
     else:
         caps["round_step"] = ex._round_step = _Capture(ex._round_step)
     sim.run()
 
+    # donated-buffer counts: pool+EF+accumulator for the masked round
+    # step, pool+EF for the deferred chunk kernel, the carry for the
+    # fold/finalizer
+    expect_aliases = {"round_step": 3, "tier_chunk_defer": 2,
+                      "fold": 1, "finalize": 1}
     reports = []
     for name, cap in caps.items():
         if cap.jaxpr is None:
@@ -202,14 +212,36 @@ def verify_round_engine(ragged: bool, **overrides) -> list:
             continue
         reports.append(check_no_f64(cap.jaxpr, f"{label}/{name}"))
         reports.append(check_no_callbacks(cap.jaxpr, f"{label}/{name}"))
-        # finalize donates 1 buffer; the chunk/round steps donate 3
-        expect = 1 if name == "finalize" else 3
-        reports.append(check_donation_text(cap.hlo, f"{label}/{name}",
-                                           expect_aliases=expect))
+        reports.append(check_donation_text(
+            cap.hlo, f"{label}/{name}",
+            expect_aliases=expect_aliases[name]))
     if ragged:
         reports.append(check_tier_shapes(ex.telemetry(), label))
         reports.append(check_tier_lattice_membership(ex, label))
     return reports
+
+
+def verify_wire_engine(**overrides) -> list:
+    """Trace the wire-boundary engine's deferred chunk step (DESIGN.md
+    §11) through a tiny loopback run with faults + robust aggregation —
+    the step donates 2 buffers (pool, EF) and must obey the same no-f64 /
+    no-callback contracts as the fused path it mirrors."""
+    from repro.fl import faults as F
+    from repro.fl.simulation import Simulator
+    sim = Simulator(_tiny_cfg(
+        ragged=True, wire="loopback",
+        faults=F.FaultConfig(dropout_rate=0.2, byzantine_frac=0.2),
+        aggregation="trimmed_mean", **overrides))
+    ex = sim.executor
+    cap = ex._tier_chunk_defer = _Capture(ex._tier_chunk_defer)
+    sim.run()
+    if cap.jaxpr is None:
+        return [ContractReport("traced[wire/tier_chunk_defer]", False,
+                               "never called")]
+    return [check_no_f64(cap.jaxpr, "wire/tier_chunk_defer"),
+            check_no_callbacks(cap.jaxpr, "wire/tier_chunk_defer"),
+            check_donation_text(cap.hlo, "wire/tier_chunk_defer",
+                                expect_aliases=2)]
 
 
 def verify_track_b() -> list:
@@ -236,6 +268,7 @@ def verify_track_b() -> list:
 def run_contracts(track_b: bool = True) -> list:
     reports = verify_round_engine(ragged=False)
     reports += verify_round_engine(ragged=True)
+    reports += verify_wire_engine()
     if track_b:
         reports += verify_track_b()
     return reports

@@ -92,6 +92,8 @@ class OwnershipAudit:
             self._wrap(sim.planner, m, "planner", t_pos=0)
         self._wrap(sim.executor, "step", "executor", t_pos=None)
         self._wrap(sim.executor, "step_ragged", "executor", t_pos=None)
+        self._wrap(sim.executor, "step_ragged_deferred", "executor",
+                   t_pos=None)
         self._wrap(sim, "_prefetch_pkg", "prefetch", t_pos=0)
         # the store is built inside run(); hook its factory
         make_store = sim._make_store
@@ -183,12 +185,21 @@ def audit_run(**overrides) -> tuple:
 
 
 def run_ownership() -> list:
-    """Audit both engine modes; returns contract-style reports."""
+    """Audit both engine modes plus the wire-boundary round; returns
+    contract-style reports."""
     from repro.analysis.contracts import ContractReport
+    from repro.fl import faults as F
     out = []
-    for ragged in (True, False):
-        label = "ragged" if ragged else "masked"
-        violations, audit = audit_run(ragged=ragged)
+    cases = [("ragged", dict(ragged=True)),
+             ("masked", dict(ragged=False)),
+             # wire round: transport drains + deferred step + robust fold
+             # are all main-thread work; the worker still owns planning
+             # AND the fault draw (pure numpy — REP003)
+             ("wire", dict(ragged=True, wire="loopback",
+                           faults=F.FaultConfig(dropout_rate=0.2,
+                                                byzantine_frac=0.2)))]
+    for label, overrides in cases:
+        violations, audit = audit_run(**overrides)
         n = len(audit.touches)
         out.append(ContractReport(
             f"ownership[pipelined/{label}]", not violations,

@@ -3,9 +3,10 @@ from repro.analysis.rules.hotloop import REP006
 from repro.analysis.rules.jaxsafe import REP004, REP005, REP007
 from repro.analysis.rules.rng import REP001, REP002
 from repro.analysis.rules.threads import REP003, REP008
+from repro.analysis.rules.wirekind import REP009
 
 ALL_RULES = [REP001(), REP002(), REP003(), REP004(), REP005(), REP006(),
-             REP007(), REP008()]
+             REP007(), REP008(), REP009()]
 
 __all__ = ["ALL_RULES", "REP001", "REP002", "REP003", "REP004", "REP005",
-           "REP006", "REP007", "REP008"]
+           "REP006", "REP007", "REP008", "REP009"]

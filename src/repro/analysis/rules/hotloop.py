@@ -26,7 +26,8 @@ from repro.analysis.lint import (Rule, attr_chain, functions, own_nodes,
                                  terminal_name)
 
 # attribute names whose call results live on device
-_TAINT_SOURCES = {"step", "step_ragged", "_round_step", "_tier_chunk",
+_TAINT_SOURCES = {"step", "step_ragged", "step_ragged_deferred",
+                  "_round_step", "_tier_chunk", "_tier_chunk_defer",
                   "_finalize", "_hist", "_eval", "lr_at", "_gather",
                   "_to_f32", "_round_vmapped", "apply_fn"}
 _SINK_FUNCS = {"float", "int"}

@@ -1,0 +1,48 @@
+"""REP009 — wire/fault modules draw ONLY from the KIND_FAULTS stream.
+
+The wire-boundary engine's resume guarantee (a mid-run checkpoint restore
+replays the identical dropout/Byzantine/corruption schedule) holds because
+every fault draw is a pure function of (seed, KIND_FAULTS, t, ...) — no
+wall state, no shared generator, no other kind. A draw in fl/faults.py,
+fl/wire.py or fl/robust.py that keys any OTHER kind would silently couple
+the fault schedule to an unrelated consumer's stream (the pre-PR-8
+aliasing bug, reborn at the wire boundary), and a draw with no kind at all
+is REP001's root-stream bug. This rule pins the discipline structurally:
+inside the wire modules, every ``stream``/``sequence`` call must name
+``KIND_FAULTS`` as its kind argument.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Rule, terminal_name
+
+_STREAM_FNS = {"stream", "sequence"}
+
+
+class REP009(Rule):
+    code = "REP009"
+    summary = "wire/fault RNG draw not keyed by KIND_FAULTS"
+    scope = ("fl/wire.py", "fl/faults.py", "fl/robust.py")
+
+    def check(self, src):
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if terminal_name(node.func) not in _STREAM_FNS:
+                continue
+            kind = node.args[1] if len(node.args) >= 2 else None
+            for kw in node.keywords:
+                if kw.arg == "kind":
+                    kind = kw.value
+            if kind is None:
+                yield self.diag(
+                    src, node,
+                    "RNG stream without a kind argument — wire/fault draws "
+                    "must key (seed, KIND_FAULTS, ...)")
+            elif terminal_name(kind) != "KIND_FAULTS":
+                yield self.diag(
+                    src, node,
+                    "wire/fault modules own exactly one RNG kind; key this "
+                    "draw with KIND_FAULTS (repro.core.rng), not "
+                    f"{terminal_name(kind) or 'a computed kind'}")

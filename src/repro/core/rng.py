@@ -29,6 +29,12 @@ KIND_SR_SCATTER = 3     # stochastic-rounding scatter, per (round, chunk) (PR 5)
 KIND_CAP_TIER = 4       # persistent hardware tier, drawn once (PR 8)
 KIND_DATASET = 5        # synthetic dataset generation / token streams (PR 8)
 KIND_PARTITION = 6      # Dirichlet non-IID partition (PR 8)
+# wire-boundary fault engine (PR 9): step 0 = the once-per-run Byzantine
+# membership draw; step (t,) = round t's dropout/straggler/corruption
+# draws; step (t, client) = per-client attack noise / bit-flip positions.
+# Keyed by ROUND, never by wall state, so a checkpoint resume replays the
+# identical fault schedule (tests/test_faults.py pins this).
+KIND_FAULTS = 7
 
 
 def sequence(seed: int, kind: int, *steps: int) -> np.random.SeedSequence:

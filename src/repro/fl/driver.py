@@ -50,6 +50,9 @@ from repro.core import compression as C
 from repro.core import rng as RNG
 from repro.data import partition, synthetic
 from repro.fl import baselines as BL
+from repro.fl import faults as F
+from repro.fl import robust as RB
+from repro.fl import wire as W
 from repro.fl.capability import CapabilityModel
 from repro.fl.executor import RoundExecutor, TierGroup
 from repro.fl.planner import RoundPlanner
@@ -129,6 +132,28 @@ class SimConfig:
     fic_up_only: bool = False
     # synthetic-task difficulty overrides (e.g. {"sep": 2.0, "noise": 1.0})
     dataset_kwargs: Optional[dict] = None
+    # --- wire-boundary fault engine (DESIGN.md §11) -----------------------
+    # "inproc" keeps the legacy in-process aggregate; "loopback" serializes
+    # every upload through the wire codec + an in-process FIFO (bit-
+    # identical at zero faults — CI-gated); "queue" uses a multiprocessing
+    # queue. Faults and non-mean aggregation REQUIRE a wire (they act on
+    # serialized payloads).
+    wire: str = "inproc"
+    # fault injection rates (dropout/straggler/corruption/Byzantine); only
+    # honored when wire != "inproc"
+    faults: F.FaultConfig = dataclasses.field(default_factory=F.FaultConfig)
+    # server aggregation policy: mean | trimmed_mean | norm_clip
+    aggregation: str = "mean"
+    # trimmed_mean: fraction of the cohort trimmed from EACH extreme
+    trim_frac: float = 0.1
+    # norm_clip: clip threshold C (None ⇒ per-round median upload norm)
+    clip_norm: Optional[float] = None
+    # wire value payload precision: float32 (exact) | bfloat16 (half the
+    # value bytes, lossy — NOT bit-identical to inproc)
+    wire_value_dtype: str = "float32"
+    # record ||restored − true||/||true|| at every centroid restore
+    # (ROADMAP item 1); surfaced via executor.telemetry()["restore_error"]
+    measure_eviction_error: bool = False
 
 
 @dataclasses.dataclass
@@ -151,6 +176,10 @@ class History:
     waiting_per_round: list = dataclasses.field(default_factory=list)
     wall_per_round: list = dataclasses.field(default_factory=list)
     compile_s: float = 0.0     # round-1 wall (jit compile + first dispatch)
+    # wire engine only: cumulative SERIALIZED bytes×8 actually sent
+    # (headers, bitpacked indices, CRC, retransmissions) — the measured
+    # counterpart of the modeled ``traffic_bits``; empty under "inproc"
+    wire_bits: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         return {"final_acc": self.accuracy[-1] if self.accuracy else 0.0,
@@ -181,6 +210,7 @@ class RoundPkg:
     xs: Optional[np.ndarray] = None   # cap-shaped [P, τ, b_max, ...]
     ys: Optional[np.ndarray] = None
     tiers: Optional[list] = None      # list[TierGroup]
+    fplan: Optional[F.FaultPlan] = None   # wire engine: round fault draw
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +289,43 @@ class Simulator:
             use_ef=cfg.caesar.use_error_feedback)
         self.store: Optional[ClientStateStore] = None
 
+        # --- wire-boundary fault engine (DESIGN.md §11) -------------------
+        if cfg.wire not in ("inproc", "loopback", "queue"):
+            raise ValueError(f"unknown wire {cfg.wire!r} "
+                             "(want inproc|loopback|queue)")
+        if cfg.aggregation not in RB.AGGREGATIONS:
+            raise ValueError(f"unknown aggregation {cfg.aggregation!r}; "
+                             f"want one of {RB.AGGREGATIONS}")
+        self._wire_on = cfg.wire != "inproc"
+        if not self._wire_on and (cfg.faults.enabled()
+                                  or cfg.aggregation != "mean"):
+            raise ValueError(
+                "fault injection and non-mean aggregation act on SERIALIZED "
+                "payloads — set wire='loopback' (or 'queue')")
+        if self._wire_on:
+            if cfg.scheme != "caesar":
+                raise ValueError("the wire engine currently supports "
+                                 "scheme='caesar' only")
+            if not cfg.ragged:
+                raise ValueError("the wire engine requires ragged=True "
+                                 "(it replays the tier-chunk stream)")
+            if cfg.sharded:
+                raise ValueError("the wire engine is single-mesh "
+                                 "(set sharded=False)")
+            self._byz_members = F.byzantine_members(
+                cfg.faults, cfg.seed, cfg.n_clients)
+            self._aggregator = RB.make_aggregator(
+                cfg.aggregation, cohort=self.n_part,
+                trim_frac=cfg.trim_frac, clip_norm=cfg.clip_norm)
+        # uploads deferred from round t-1 under late_policy="defer":
+        # list of (client id, WireUpload)
+        self._deferred: list = []
+        self._transport = None
+        # one dict per simulated round (status/byz arrays + byte counts) —
+        # the raw record fig11 and the resume test consume
+        self.fault_log: list = []
+        self._t_done = 0
+
         def evaluate(flat_params, x, y):
             logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
                                    x)
@@ -303,7 +370,9 @@ class Simulator:
             capacity=self.cfg.state_capacity, cohort=self.n_part,
             n_shards=self.n_dev, mesh=self.mesh,
             offload=self.cfg.state_offload,
-            offload_dir=self.cfg.state_dir)
+            offload_dir=self.cfg.state_dir,
+            volumes=self.volumes,
+            measure_restore_error=self.cfg.measure_eviction_error)
 
     # ------------------------------------------------------------------
     # Host-side producer work (participant draw + plan + batch gather).
@@ -490,6 +559,27 @@ class Simulator:
                                    ims=ims))
         return tiers
 
+    def _plan_faults(self, t: int, parts: np.ndarray,
+                     plan: tuple, mu, bw_d, bw_u) -> Optional[F.FaultPlan]:
+        """Round t's fault draw. Pure numpy (it runs on the prefetch
+        worker — REP003 keeps device ops off the producer thread, which is
+        why the deadline uses ``faults.round_times_np``, the f64 twin of
+        ``core.batchsize.round_times``). None when the wire engine is off."""
+        if not self._wire_on:
+            return None
+        cfg = self.cfg
+        times = None
+        if cfg.faults.straggler_deadline > 0.0:
+            theta_d, theta_u, batch, taus = plan
+            times = F.round_times_np(
+                np.asarray(theta_d, np.float64),
+                np.asarray(theta_u, np.float64),
+                float(self.model_bits), bw_d[parts], bw_u[parts],
+                np.asarray(taus, np.float64),
+                np.asarray(batch, np.float64), mu[parts])
+        return F.plan_faults(cfg.faults, cfg.seed, t, parts, times,
+                             self._byz_members)
+
     def _prefetch_pkg(self, t: int, bufs: dict) -> RoundPkg:
         """The full producer step for round t (worker thread when
         pipelined): draw → capability snapshot → [Caesar: plan + state
@@ -505,13 +595,149 @@ class Simulator:
             # stays on the main thread — its (tiny) jitted math would only
             # contend with the in-flight device step
             plan = self.planner.plan(t, parts, mu, bw_d, bw_u)
-            self.planner.advance(t, parts)
+            fplan = self._plan_faults(t, parts, plan, mu, bw_d, bw_u)
+            # failed rounds never advance their clients' participation
+            # record: a dropped client's next round must resync exactly as
+            # if it had not participated (its pool row rolls back too)
+            self.planner.advance(
+                t, parts if fplan is None else parts[fplan.record])
             tiers = self._tiers_from_idx(idx, plan[2], plan[3], bufs)
-            return RoundPkg(parts, mu, bw_d, bw_u, plan=plan, tiers=tiers)
+            return RoundPkg(parts, mu, bw_d, bw_u, plan=plan, tiers=tiers,
+                            fplan=fplan)
         if "cap" not in bufs:
             bufs["cap"] = self._alloc_batch_buffers(self.n_part)
         xs, ys = self._gather_cap(idx, bufs["cap"])
         return RoundPkg(parts, mu, bw_d, bw_u, xs=xs, ys=ys)
+
+    # ------------------------------------------------------------------
+    # The wire-boundary round (DESIGN.md §11): deferred tier-chunk step →
+    # per-client serialize (+ attack/corrupt) → transport → server decode
+    # + robust aggregate. Replays the exact chunk stream the in-process
+    # engine folds, so zero faults + mean + f32 is bit-identical (CI-gated).
+    # ------------------------------------------------------------------
+
+    def _wire_round(self, global_f, store, pkg: RoundPkg, tiers, lr,
+                    td32, tu32, t: int):
+        cfg = self.cfg
+        fp = pkg.fplan
+        parts = pkg.parts
+        chunks, db_o, ub_o, gn_o = self.executor.step_ragged_deferred(
+            global_f, store, parts, tiers, lr, td32, tu32, t=t,
+            wmask=fp.adopt)
+
+        # -- client side: serialize each surviving upload onto the wire --
+        tr = self._transport
+        wire_bytes = 0
+        resent = np.zeros(len(parts), bool)
+        sent = []        # pos (parts order) in send order
+        retained = {}    # pos -> clean payload, for the retry-once path
+        for pos_c, slots, c, ups in chunks:
+            ups_np = np.asarray(ups)
+            for row_i, pos in zip(slots, pos_c):
+                pos = int(pos)
+                if fp.status[pos] == F.DROP:
+                    continue
+                row = ups_np[row_i]
+                idx = np.flatnonzero(row)
+                vals = row[idx]
+                if fp.byz[pos]:
+                    vals = F.attack_values(cfg.faults, cfg.seed, t,
+                                           int(parts[pos]), vals)
+                payload = W.encode_upload(
+                    idx, vals, client=int(parts[pos]), round_=t,
+                    n_params=self.n_params,
+                    value_dtype=cfg.wire_value_dtype)
+                retained[pos] = payload
+                wire_bytes += len(payload)
+                if fp.corrupt_first[pos]:
+                    payload = F.flip_bit(payload, cfg.seed, t,
+                                         int(parts[pos]), salt=0)
+                tr.send(payload)
+                sent.append(pos)
+        payloads = (tr.drain(len(sent)) if cfg.wire == "queue"
+                    else tr.drain())
+
+        # -- server side: decode + CRC check, retry-once, deadline sort --
+        accepted = []        # (pos, WireUpload) folded THIS round
+        deferred_next = []   # (client, WireUpload) arriving next round
+        n_crc_drop = 0
+        for pos, payload in zip(sent, payloads):
+            try:
+                u = W.decode_upload(payload)
+            except W.WireCRCError:
+                # retry-once: the client retransmits its retained payload
+                # (priced as real traffic); a corrupted retry drops it
+                p2 = retained[pos]
+                wire_bytes += len(p2)
+                resent[pos] = True
+                if fp.status[pos] == F.CORRUPT_DROP:
+                    p2 = F.flip_bit(p2, cfg.seed, t, int(parts[pos]),
+                                    salt=1)
+                try:
+                    u = W.decode_upload(p2)
+                except W.WireCRCError:
+                    n_crc_drop += 1
+                    continue
+            if fp.status[pos] == F.LATE:
+                if cfg.faults.late_policy == "defer":
+                    deferred_next.append((int(parts[pos]), u))
+                continue
+            accepted.append((pos, u))
+        defer_in = self._deferred
+        self._deferred = deferred_next
+
+        # -- robust aggregate: replay the chunk stream + late arrivals --
+        agg = self._aggregator
+        if agg.needs_norms:
+            norms = np.asarray(
+                [float(np.linalg.norm(u.values)) for _, u in accepted]
+                + [float(np.linalg.norm(u.values)) for _, u in defer_in])
+            sc = agg.scales(norms)
+            w_of = dict(zip([pos for pos, _ in accepted], sc.tolist()))
+            w_defer = sc[len(accepted):].tolist()
+        else:
+            w_of = {pos: 1.0 for pos, _ in accepted}
+            w_defer = [1.0] * len(defer_in)
+        by_pos = dict(accepted)
+        carry = agg.init(self.n_params)
+        cnt = 0
+        for pos_c, slots, c, _ups in chunks:
+            dense = np.zeros((c, self.n_params), np.float32)
+            w = np.zeros(c, np.float32)
+            for row_i, pos in zip(slots, pos_c):
+                u = by_pos.get(int(pos))
+                if u is None:
+                    continue
+                dense[row_i, u.indices] = u.values
+                w[row_i] = w_of[int(pos)]
+                cnt += 1
+            carry = agg.update(carry, dense, w)
+        if defer_in:
+            # deferred arrivals fold after the live chunks, rung-padded so
+            # the jit cache sees power-of-two shapes only
+            d = len(defer_in)
+            d_pad = 1 << (d - 1).bit_length()
+            dense = np.zeros((d_pad, self.n_params), np.float32)
+            w = np.zeros(d_pad, np.float32)
+            for i, (_cl, u) in enumerate(defer_in):
+                dense[i, u.indices] = u.values
+                w[i] = w_defer[i]
+            carry = agg.update(carry, dense, w)
+            cnt += d
+        new_global = agg.finalize(global_f, carry, cnt)
+
+        self.fault_log.append({
+            "round": t, "parts": parts.copy(),
+            "status": fp.status.copy(), "byz": fp.byz.copy(),
+            "corrupt_first": fp.corrupt_first.copy(),
+            "n_aggregated": len(accepted), "n_deferred_in": len(defer_in),
+            "n_deferred_out": len(deferred_next),
+            "n_crc_dropped": n_crc_drop, "wire_bytes": wire_bytes})
+        # modeled upload traffic: only bytes that hit the wire count, and
+        # a CRC retry pays twice
+        up_eff = (ub_o * fp.uploads_sent().astype(np.float32)
+                  * (1.0 + resent.astype(np.float32)))
+        return new_global, db_o, up_eff, gn_o, wire_bytes
 
     def _init_global(self):
         """Fresh [n_params] f32 global vector — the step donates it, so
@@ -523,15 +749,39 @@ class Simulator:
                                      np.asarray(self.flat0).copy())
 
     # ------------------------------------------------------------------
-    def run(self, log: Callable[[str], None] = lambda s: None) -> History:
+    def run(self, log: Callable[[str], None] = lambda s: None,
+            start_round: int = 1) -> History:
+        """Simulate rounds [start_round, cfg.rounds]. ``start_round > 1``
+        resumes a checkpoint previously installed via `load_state_dict`
+        (planner/store/global/accounting state all restored); because every
+        per-round draw — sampling, stochastic rounding AND the fault
+        schedule — is keyed by (seed, kind, t), the resumed tail replays
+        the identical rounds the uninterrupted run would have simulated."""
         cfg = self.cfg
         ccfg = cfg.caesar
         b_max, tau = ccfg.b_max, ccfg.tau
         q_bits = float(self.model_bits)
         hist = History()
-        global_f = self._init_global()
-        store = self.store = self._make_store()
-        cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
+        if start_round > 1:
+            rs = getattr(self, "_resume", None)
+            if rs is None or rs["t_done"] != start_round - 1:
+                raise ValueError(
+                    f"start_round={start_round} needs a checkpoint of "
+                    f"{start_round - 1} completed rounds loaded via "
+                    "load_state_dict")
+            global_f = jnp.asarray(np.asarray(rs["global_flat"]))
+            store = self.store
+            cum_time, cum_bits, waiting_sum = rs["acct"]
+            wire_bits_cum = rs["wire_bits"]
+        else:
+            global_f = self._init_global()
+            store = self.store = self._make_store()
+            cum_time, cum_bits, waiting_sum = 0.0, 0.0, 0.0
+            wire_bits_cum = 0.0
+            self._deferred = []
+            self.fault_log = []
+        self._transport = (W.make_transport(cfg.wire) if self._wire_on
+                           else None)
         # double-buffered producer: one worker prefetches round t+1's
         # package (participants, plan, tier- or cap-shaped batches — pure
         # numpy + tiny jitted plan math) into the OFF buffer slot while the
@@ -546,8 +796,8 @@ class Simulator:
             return self._prefetch_pkg(t, bufs[t % n_bufs])
 
         try:
-            pending = pool.submit(prefetch, 1) if pool else None
-            for t in range(1, cfg.rounds + 1):
+            pending = pool.submit(prefetch, start_round) if pool else None
+            for t in range(start_round, cfg.rounds + 1):
                 wall0 = time.perf_counter()
                 if pool:
                     pkg = pending.result()
@@ -571,13 +821,20 @@ class Simulator:
                     self.planner.advance(t, parts)
                 td32 = np.asarray(theta_d, np.float32)
                 tu32 = np.asarray(theta_u, np.float32)
+                wire_bytes = 0
                 if cfg.ragged:
                     tiers = (pkg.tiers if pkg.tiers is not None else
                              self._tiers_from_cap(pkg.xs, pkg.ys, batch,
                                                   taus))
-                    (global_f, down_bits, up_bits,
-                     gnorms) = self.executor.step_ragged(
-                        global_f, store, parts, tiers, lr, td32, tu32, t=t)
+                    if self._wire_on:
+                        (global_f, down_bits, up_bits, gnorms,
+                         wire_bytes) = self._wire_round(
+                            global_f, store, pkg, tiers, lr, td32, tu32, t)
+                    else:
+                        (global_f, down_bits, up_bits,
+                         gnorms) = self.executor.step_ragged(
+                            global_f, store, parts, tiers, lr, td32, tu32,
+                            t=t)
                 else:
                     ws, ims = self._batch_masks(batch, taus, b_max, tau)
                     (global_f, down_bits, up_bits,
@@ -603,9 +860,17 @@ class Simulator:
                     bw_d[parts], bw_u[parts],
                     np.asarray(taus, np.float64),
                     np.asarray(batch, np.float64), mu[parts]))
-                cum_time += float(times.max())
-                waiting = float(np.mean(times.max() - times))
+                # under the wire engine a straggler deadline CLOSES the
+                # round early (late uploads discarded or deferred); with no
+                # deadline (inf) this is exactly the legacy barrier
+                close = float(times.max())
+                if pkg.fplan is not None:
+                    close = min(close, float(pkg.fplan.deadline))
+                cum_time += close
+                waiting = float(np.mean(np.maximum(close - times, 0.0)))
                 waiting_sum += waiting
+                wire_bits_cum += wire_bytes * 8.0
+                self._t_done = t
                 hist.waiting_per_round.append(waiting)
                 # the np.asarray conversions above synced on the step
                 # outputs, so this is an honest per-round host wall-clock
@@ -624,6 +889,8 @@ class Simulator:
                     hist.traffic_bits.append(cum_bits)
                     hist.accuracy.append(acc)
                     hist.waiting.append(waiting_sum / t)
+                    if self._wire_on:
+                        hist.wire_bits.append(wire_bits_cum)
                     # warm mean: round 1 carries the jit compile
                     # (hist.compile_s); until a warm sample exists, fall
                     # back to the cold one
@@ -639,9 +906,65 @@ class Simulator:
         finally:
             if pool:
                 pool.shutdown(wait=False, cancel_futures=True)
+            if self._transport is not None:
+                self._transport.close()
+                self._transport = None
         self.global_flat = global_f          # expose final flat model
         self.ef_flat = store.ef_pool         # [capacity, ef_width] residuals
+        self._acct = (cum_time, cum_bits, waiting_sum)
+        self._wire_bits_cum = wire_bits_cum
         return hist
+
+    # ------------------------------------------------------------------
+    # Checkpoint / resume (DESIGN.md §11). Everything a resumed tail needs
+    # to replay bit-identically: the global model, the client-state pool,
+    # the planner's participation record + grad norms, the accounting
+    # counters, and any uploads deferred across the checkpoint boundary.
+    # The fault schedule itself needs NO state — it is a pure function of
+    # (seed, KIND_FAULTS, t), so the resumed run redraws it identically.
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Portable (numpy-only) checkpoint after `run` simulated
+        ``self._t_done`` rounds. Feed to a FRESH Simulator of the same
+        config via `load_state_dict`, then `run(start_round=t_done + 1)`."""
+        leaves, _ = jax.tree_util.tree_flatten(self.planner.caesar_state)
+        return {
+            "t_done": int(self._t_done),
+            "global_flat": np.asarray(self.global_flat).copy(),
+            "store": self.store.state_dict(),
+            "caesar_leaves": [np.asarray(x).copy() for x in leaves],
+            "grad_norms": self.planner.grad_norms.copy(),
+            "acct": tuple(getattr(self, "_acct", (0.0, 0.0, 0.0))),
+            "wire_bits": float(getattr(self, "_wire_bits_cum", 0.0)),
+            "deferred": [(int(cl), int(u.round), u.indices.copy(),
+                          u.values.copy()) for cl, u in self._deferred],
+            "fault_log": [dict(e) for e in self.fault_log],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Install a `state_dict` checkpoint (rebuilds the store via
+        `_make_store`, restores the planner pytree against this config's
+        treedef) and arm `run(start_round=...)` to continue it."""
+        _, treedef = jax.tree_util.tree_flatten(self.planner.caesar_state)
+        self.planner.caesar_state = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(np.asarray(x)) for x in d["caesar_leaves"]])
+        self.planner.grad_norms = np.asarray(d["grad_norms"]).copy()
+        store = self._make_store()
+        store.load_state_dict(d["store"])
+        self.store = store
+        self.global_flat = jnp.asarray(np.asarray(d["global_flat"]))
+        self._deferred = [
+            (cl, W.WireUpload(client=cl, round=r, n_params=self.n_params,
+                              indices=np.asarray(ix, np.int32),
+                              values=np.asarray(v, np.float32)))
+            for cl, r, ix, v in d["deferred"]]
+        self.fault_log = [dict(e) for e in d["fault_log"]]
+        self._t_done = int(d["t_done"])
+        self._resume = {"t_done": int(d["t_done"]),
+                        "global_flat": np.asarray(d["global_flat"]).copy(),
+                        "acct": tuple(d["acct"]),
+                        "wire_bits": float(d["wire_bits"])}
 
     def reset(self):
         """Reset round/planner state so `run` can be repeated on the SAME

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import batchsize as BS
 from repro.core import compression as C
 from repro.core import rng as RNG
+from repro.fl.robust import weighted_row_fold
 from repro.launch import mesh as MESH
 
 BUFFER_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
@@ -147,6 +148,7 @@ class RoundExecutor:
         self._shapes_seen: set = set()
         self.work_ragged = 0
         self.work_cap = 0
+        self._last_store = None
         self._build()
 
     # -- tier shape lattice -------------------------------------------------
@@ -185,11 +187,19 @@ class RoundExecutor:
     def telemetry(self) -> dict:
         occ = {f"b{b}xt{t}": int(n)
                for (b, t), n in sorted(self.tier_occupancy.items())}
-        return {"tier_occupancy": occ,
-                "compiled_tier_shapes": len(self._shapes_seen),
-                "shape_lattice_bound": self.shape_lattice_bound(),
-                "work_fraction": (self.work_ragged / self.work_cap
-                                  if self.work_cap else 1.0)}
+        out = {"tier_occupancy": occ,
+               "compiled_tier_shapes": len(self._shapes_seen),
+               "shape_lattice_bound": self.shape_lattice_bound(),
+               "work_fraction": (self.work_ragged / self.work_cap
+                                 if self.work_cap else 1.0)}
+        # eviction-error telemetry (ROADMAP item 1) is measured where the
+        # restores happen — surface the store's numbers alongside the
+        # executor's so benchmarks read one dict
+        if self._last_store is not None:
+            err = self._last_store.telemetry().get("restore_error")
+            if err is not None:
+                out["restore_error"] = err
+        return out
 
     # -- RNG for the stochastic-rounding scatter ----------------------------
 
@@ -409,7 +419,9 @@ class RoundExecutor:
                 global_f, g_cdf, g_max, lp_sel, ef_sel, xs, ys, ws, ims,
                 lr, theta_d, theta_u)
             sel = pmask[:, None] > 0
-            up_sum = up_sum + jnp.sum(ups * pmask[:, None], axis=0)
+            # association-fixed fold shared with the server-side
+            # replay (fl/robust.py) — see weighted_row_fold
+            up_sum = weighted_row_fold(up_sum, ups, pmask)
             buf = buf.at[parts_l].set(
                 cast(jnp.where(sel, new_lp, lp_sel),
                      jax.random.PRNGKey(seed)))
@@ -417,7 +429,11 @@ class RoundExecutor:
             return buf, ef_buf, up_sum, db, ub, gn
 
         if self.mesh is None:
-            self._tier_chunk = jax.jit(tier_chunk, donate_argnums=(0, 1, 2))
+            # unsharded rounds run tier_chunk_defer + this fold instead of
+            # the fused tier_chunk — see step_ragged; the fused variant
+            # stays the sharded path's kernel (one all-reduce per chunk)
+            self._tier_chunk = None
+            self._fold = jax.jit(weighted_row_fold, donate_argnums=(0,))
         else:
             def shard_body(buf, ef_buf, up_sum, global_f, g_cdf, g_max,
                            parts, pmask, xs, ys, ws, ims, lr, td, tu, seed):
@@ -440,6 +456,35 @@ class RoundExecutor:
                            P("data")),
                 axis_names={"data"})
             self._tier_chunk = jax.jit(sm, donate_argnums=(0, 1, 2))
+
+        def tier_chunk_defer(buf, ef_buf, global_f, g_cdf, g_max, parts_l,
+                             wmask, xs, ys, ws, ims, lr, theta_d, theta_u,
+                             seed):
+            """Wire-boundary twin of ``tier_chunk``: identical per-
+            participant math and row writes, but the raw uploads come BACK
+            [c, n_params] instead of folding into an accumulator — the
+            server aggregates them after the serialize → transport →
+            decode round trip (fl/robust.py replays the same fold, so the
+            zero-fault result is bit-identical). ``wmask`` is the row-
+            ADOPTION mask: a dropped participant trains but its pool/EF
+            rows roll back (the server never saw the round)."""
+            lp_raw = buf[parts_l]                   # [c, n_params]
+            lp_sel = lp_raw.astype(jnp.float32)
+            ef_sel = ef_buf[parts_l]                # [c, ef_width]
+            ups, new_lp, new_ef, db, ub, gn = jax.vmap(
+                participant_round,
+                in_axes=(None, None, None, 0, 0, 0, 0, 0, 0, None, 0, 0))(
+                global_f, g_cdf, g_max, lp_sel, ef_sel, xs, ys, ws, ims,
+                lr, theta_d, theta_u)
+            sel = wmask[:, None] > 0
+            buf = buf.at[parts_l].set(
+                cast(jnp.where(sel, new_lp, lp_sel),
+                     jax.random.PRNGKey(seed)))
+            ef_buf = ef_buf.at[parts_l].set(jnp.where(sel, new_ef, ef_sel))
+            return buf, ef_buf, ups, db, ub, gn
+
+        self._tier_chunk_defer = jax.jit(tier_chunk_defer,
+                                         donate_argnums=(0, 1))
 
         self._hist = jax.jit(
             lambda g: C.fused_histogram_cdf(g, backend))
@@ -488,6 +533,7 @@ class RoundExecutor:
         """Activate the round's participants in the store (MAIN thread —
         the pool is donated through the in-flight step) and validate the
         sharded stratification. Returns (slots [P] i32, shard order)."""
+        self._last_store = store
         parts = np.asarray(parts)
         owner = parts // self.rows_per_shard
         if self.n_dev > 1:
@@ -614,6 +660,23 @@ class RoundExecutor:
                 self.work_ragged += len(a["parts"]) * tg.tau * tg.b
                 self._shapes_seen.add((len(a["parts"]) // self.n_dev,
                                        int(tg.tau), int(tg.b)))
+                if self.mesh is None:
+                    # single compiled kernel shared with the wire path:
+                    # tier_chunk_defer + the association-fixed fold — one
+                    # XLA module either way, so wire replay bit-identity
+                    # holds by construction, not by fusion luck
+                    pmask = jnp.asarray(a["pmask"])
+                    buf, ef, ups, db, ub, gn = self._tier_chunk_defer(
+                        buf, ef, global_f, g_cdf, g_max,
+                        jnp.asarray(a["parts"]), pmask,
+                        jnp.asarray(a["xs"]), jnp.asarray(a["ys"]),
+                        jnp.asarray(a["ws"]), jnp.asarray(a["ims"]), lr,
+                        jnp.asarray(a["td"]), jnp.asarray(a["tu"]),
+                        jnp.uint32(self._round_seed(t, call_i)))
+                    up_sum = self._fold(up_sum, ups, pmask)
+                    call_i += 1
+                    pend.append((pos_c, slots, db, ub, gn))
+                    continue
                 buf, ef, up_sum, db, ub, gn = self._tier_chunk(
                     buf, ef, up_sum, global_f, g_cdf, g_max,
                     self._put(a["parts"], P("data")),
@@ -638,3 +701,66 @@ class RoundExecutor:
             ub_o[pos_c] = MESH.fetch_global(ub)[slots]
             gn_o[pos_c] = MESH.fetch_global(gn)[slots]
         return new_global, db_o, ub_o, gn_o
+
+    def step_ragged_deferred(self, global_f, store, parts: np.ndarray,
+                             tiers: list, lr, theta_d, theta_u,
+                             t: int = 0, wmask=None):
+        """Wire-boundary variant of `step_ragged` (DESIGN.md §11): runs the
+        identical tier-chunk stream but DEFERS aggregation — each chunk's
+        raw uploads come back [c, n_params] for the caller to serialize,
+        transport and fold server-side (fl/robust.py replays the same
+        chunk-ordered accumulate, so a zero-fault round is bit-identical).
+
+        ``wmask`` [P] bool (parts order) gates row adoption: participants
+        whose upload the server never aggregates (dropouts, discarded
+        stragglers, double-corrupted payloads) keep their pre-round
+        pool/EF rows. Returns (chunks, down_bits, up_bits, gnorms) where
+        ``chunks`` is the ordered list of (pos_c, valid_rows, c, ups) the
+        server must replay. Unsharded only (the wire boundary serializes
+        per client; a sharded wire engine would need per-shard servers)."""
+        if self.mesh is not None:
+            raise NotImplementedError("the wire-boundary round is "
+                                      "single-mesh (set sharded=False)")
+        n = len(parts)
+        wm = (np.ones(n, np.float32) if wmask is None
+              else np.asarray(wmask, np.float32))
+        slots32, _ = self._resolve_slots(store, parts, t)
+        g_cdf, g_max = self._hist(global_f)
+        buf, ef = store.pool, store.ef_pool
+        chunks = []
+        call_i = 0
+        for tg in tiers:
+            key = (int(tg.b), int(tg.tau))
+            self.tier_occupancy[key] = (self.tier_occupancy.get(key, 0)
+                                        + len(tg.pos))
+            for pos_c, slots, a in self._tier_chunks(
+                    tg, slots32, theta_d, theta_u,
+                    pad_idx=store.capacity,
+                    cap_per_shard=store.cap_per_shard):
+                c = len(a["parts"])
+                self.work_ragged += c * tg.tau * tg.b
+                self._shapes_seen.add((c, int(tg.tau), int(tg.b)))
+                wm_c = np.zeros(c, np.float32)
+                wm_c[slots] = wm[pos_c]
+                buf, ef, ups, db, ub, gn = self._tier_chunk_defer(
+                    buf, ef, global_f, g_cdf, g_max,
+                    jnp.asarray(a["parts"]), jnp.asarray(wm_c),
+                    jnp.asarray(a["xs"]), jnp.asarray(a["ys"]),
+                    jnp.asarray(a["ws"]), jnp.asarray(a["ims"]), lr,
+                    jnp.asarray(a["td"]), jnp.asarray(a["tu"]),
+                    jnp.uint32(self._round_seed(t, call_i)))
+                call_i += 1
+                chunks.append((pos_c, slots, c, ups, db, ub, gn))
+        store.adopt(buf, ef)
+        self.work_cap += n * self.tau_cap * self.b_cap
+        db_o = np.empty(n, np.float32)
+        ub_o = np.empty(n, np.float32)
+        gn_o = np.empty(n, np.float32)
+        # end-of-round readback: every chunk step has been submitted, so
+        # these syncs drain the device queue, not stall mid-round
+        for pos_c, slots, _c, _ups, db, ub, gn in chunks:
+            db_o[pos_c] = np.asarray(db)[slots]  # repro: noqa=REP006
+            ub_o[pos_c] = np.asarray(ub)[slots]  # repro: noqa=REP006
+            gn_o[pos_c] = np.asarray(gn)[slots]  # repro: noqa=REP006
+        return ([(p, s, c, u) for p, s, c, u, *_ in chunks],
+                db_o, ub_o, gn_o)

@@ -1,0 +1,206 @@
+"""Fault-injection layer of the wire-boundary engine (DESIGN.md §11).
+
+The paper's Eq.-7 sync barrier assumes every sampled device survives its
+round; this module injects the failures that assumption hides, following
+the SNIPPETS PBFT simulator's taxonomy (non-responsive vs adversarial
+replicas) at FL's wire boundary:
+
+* **mid-round dropout** — the participant finishes local training but its
+  upload never arrives (device crash / network loss after compute). The
+  server renormalizes the aggregate over the survivors and the client's
+  state-store row does NOT adopt the partial round (next participation
+  resyncs from its stale record, exactly like a crashed device).
+* **straggler timeout** — the server closes the round at a deadline
+  (``straggler_deadline`` × the round's *median* Eq.-7 finish time); late
+  uploads are ``"discard"``-ed (treated like a dropout, but their wire
+  traffic still counts — the bytes were sent) or ``"defer"``-red into the
+  next round's aggregate.
+* **payload corruption** — bit flips on the serialized payload, caught by
+  the wire CRC (fl/wire.py): the server requests ONE retry (the retransmit
+  is priced as real traffic); a second corruption drops the upload.
+* **Byzantine uploads** — a persistent adversarial client fraction attacks
+  the *compressed* representation (the sparse top-k payload, not the raw
+  gradient): ``sign_flip`` (−scale·values), ``scale`` (+scale·values) or
+  ``random`` (N(0, std·scale) at the same support).
+
+Every draw hangs off ``SeedSequence(seed, spawn_key=(KIND_FAULTS, ...))``
+(repro.core.rng): membership at step 0, round draws at step (t,),
+per-client noise at step (t, client) — keyed by round, never by wall
+state, so a mid-run checkpoint restore replays the identical schedule.
+
+This module is **pure numpy** (no jax): ``plan_faults`` runs inside the
+pipelined driver's prefetch worker (REP003 — device ops stay off the
+producer thread), which is why it carries its own numpy twin of the Eq.-7
+time model (``round_times_np``; parity vs core.batchsize.round_times is
+pinned in tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import rng as RNG
+
+ATTACKS = ("sign_flip", "scale", "random")
+LATE_POLICIES = ("discard", "defer")
+
+# FaultPlan.status codes
+OK = 0
+DROP = 1          # mid-round dropout: trained, never uploaded
+LATE = 2          # finish time beyond the round deadline
+CORRUPT_DROP = 3  # both the transmission and its retry failed CRC
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round fault rates (all default to the paper's fault-free world).
+
+    ``byzantine_frac`` selects a PERSISTENT adversarial client set (drawn
+    once per run at spawn step 0) — the same clients attack every round
+    they are sampled, matching the PBFT adversary model. The other rates
+    are per-(round, participant) Bernoulli draws."""
+    dropout_rate: float = 0.0
+    straggler_deadline: float = 0.0       # ×median Eq.-7 time; 0 ⇒ no deadline
+    late_policy: str = "discard"          # discard | defer
+    corrupt_rate: float = 0.0             # P(payload fails CRC) per transmission
+    byzantine_frac: float = 0.0
+    attack: str = "sign_flip"             # sign_flip | scale | random
+    attack_scale: float = 10.0
+
+    def __post_init__(self):
+        if self.attack not in ATTACKS:
+            raise ValueError(f"unknown attack {self.attack!r}; "
+                             f"want one of {ATTACKS}")
+        if self.late_policy not in LATE_POLICIES:
+            raise ValueError(f"unknown late_policy {self.late_policy!r}; "
+                             f"want one of {LATE_POLICIES}")
+        for name in ("dropout_rate", "corrupt_rate", "byzantine_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} outside [0, 1]")
+
+    def enabled(self) -> bool:
+        return (self.dropout_rate > 0 or self.straggler_deadline > 0
+                or self.corrupt_rate > 0 or self.byzantine_frac > 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One round's fault outcome over the participant array (parts order).
+
+    ``status`` is the transport outcome per participant (OK/DROP/LATE/
+    CORRUPT_DROP); ``byz`` flags attackers (orthogonal to status — an
+    attacker's upload still travels the wire); ``corrupt_first`` flags
+    uploads whose FIRST transmission fails CRC (server retries once;
+    ``status == CORRUPT_DROP`` means the retry draw failed too).
+    ``adopt`` is the state-store row-write mask: only rounds the server
+    actually aggregated (or deferred) may update a client's stale-model
+    record — a dropped client's slot must not adopt the partial round."""
+    status: np.ndarray          # [P] int8
+    byz: np.ndarray             # [P] bool
+    corrupt_first: np.ndarray   # [P] bool
+    adopt: np.ndarray           # [P] bool — state-store row write mask
+    record: np.ndarray          # [P] bool — planner participation record
+    deadline: float             # absolute round deadline (inf if none)
+
+    def uploads_sent(self) -> np.ndarray:
+        """Participants whose bytes hit the wire at least once."""
+        return self.status != DROP
+
+    def aggregated(self) -> np.ndarray:
+        """Participants whose upload lands in THIS round's aggregate."""
+        return self.status == OK
+
+
+def round_times_np(theta_d, theta_u, q_bits: float, bw_down, bw_up,
+                   tau, batch, mu) -> np.ndarray:
+    """Numpy twin of ``core.batchsize.round_times`` (Eq. 7) for the
+    prefetch worker — same formula, float64, no jax import (REP003)."""
+    theta_d = np.asarray(theta_d, np.float64)
+    theta_u = np.asarray(theta_u, np.float64)
+    comm = (theta_d * (q_bits / np.asarray(bw_down, np.float64))
+            + theta_u * (q_bits / np.asarray(bw_up, np.float64)))
+    return comm + (np.asarray(tau, np.float64)
+                   * np.asarray(batch, np.float64)
+                   * np.asarray(mu, np.float64))
+
+
+def byzantine_members(cfg: FaultConfig, seed: int, n_clients: int
+                      ) -> np.ndarray:
+    """[n_clients] bool persistent attacker membership — spawn step 0,
+    independent of every per-round stream."""
+    members = np.zeros(n_clients, bool)
+    k = int(round(cfg.byzantine_frac * n_clients))
+    if k:
+        rng = RNG.stream(seed, RNG.KIND_FAULTS, 0)
+        members[rng.choice(n_clients, size=k, replace=False)] = True
+    return members
+
+
+def plan_faults(cfg: FaultConfig, seed: int, t: int, parts: np.ndarray,
+                times: np.ndarray | None, byz_members: np.ndarray
+                ) -> FaultPlan:
+    """Draw round t's fault outcome. ``times`` are the participants' Eq.-7
+    finish times (may be None when no deadline is configured). Draws come
+    from the (seed, KIND_FAULTS, t) stream in a fixed order — dropout
+    uniforms, then two corruption uniforms — so the plan is a pure
+    function of (cfg, seed, t, parts, times)."""
+    p = len(parts)
+    rng = RNG.stream(seed, RNG.KIND_FAULTS, t)
+    u_drop = rng.random(p)
+    u_c1 = rng.random(p)
+    u_c2 = rng.random(p)
+
+    status = np.full(p, OK, np.int8)
+    deadline = np.inf
+    if cfg.straggler_deadline > 0:
+        if times is None:
+            raise ValueError("straggler_deadline needs the round's Eq.-7 "
+                             "finish times")
+        deadline = float(cfg.straggler_deadline
+                         * np.median(np.asarray(times, np.float64)))
+        status[np.asarray(times, np.float64) > deadline] = LATE
+    status[u_drop < cfg.dropout_rate] = DROP   # dropout trumps lateness
+    corrupt_first = (status != DROP) & (u_c1 < cfg.corrupt_rate)
+    status[(status == OK) & corrupt_first
+           & (u_c2 < cfg.corrupt_rate)] = CORRUPT_DROP
+
+    byz = byz_members[parts]
+    ok = status == OK
+    late_def = (status == LATE) & (cfg.late_policy == "defer")
+    # deferred uploads DID complete: the client's on-device model advanced
+    # and the server eventually folds the delta in, so its row adopts and
+    # its participation is recorded at t (staleness tracks the client's
+    # replica, not the server's receipt time)
+    adopt = ok | late_def
+    return FaultPlan(status=status, byz=byz, corrupt_first=corrupt_first,
+                     adopt=adopt, record=adopt.copy(), deadline=deadline)
+
+
+def attack_values(cfg: FaultConfig, seed: int, t: int, client: int,
+                  values: np.ndarray) -> np.ndarray:
+    """Apply the configured attack to one client's compressed upload
+    values (the sparse top-k payload — the adversary controls what it
+    transmits, not the server's decode). Deterministic per
+    (seed, t, client), so replay/resume sees identical attacks."""
+    values = np.asarray(values, np.float32)
+    if cfg.attack == "sign_flip":
+        return -np.float32(cfg.attack_scale) * values
+    if cfg.attack == "scale":
+        return np.float32(cfg.attack_scale) * values
+    rng = RNG.stream(seed, RNG.KIND_FAULTS, t, int(client))
+    std = float(values.std()) or 1.0
+    return rng.normal(0.0, std * cfg.attack_scale,
+                      size=values.shape).astype(np.float32)
+
+
+def flip_bit(payload: bytes, seed: int, t: int, client: int,
+             salt: int = 0) -> bytes:
+    """Flip one deterministic bit of a serialized payload (the corruption
+    the wire CRC must catch). ``salt`` distinguishes the retry draw."""
+    rng = RNG.stream(seed, RNG.KIND_FAULTS, t, int(client), 1 + salt)
+    buf = bytearray(payload)
+    bit = int(rng.integers(0, len(buf) * 8))
+    buf[bit >> 3] ^= 1 << (bit & 7)
+    return bytes(buf)

@@ -1,0 +1,208 @@
+"""Robust aggregation through the tier engine (DESIGN.md §11).
+
+The wire-boundary round replays the EXACT chunk stream the in-process
+engine folds — same tier order, same ``[c, n_params]`` chunk shapes, same
+masked-accumulate expression — but from *decoded* uploads, so an
+aggregation policy can reject or reweight individual clients without ever
+materializing a dense ``[P, n_params]`` matrix:
+
+* ``mean`` — the paper's aggregate (Algorithm 1 line 13), carried as the
+  same left-fold upload sum the fused tier-chunk step computes; at zero
+  faults the result is bit-identical to the in-process engine (CI-gated).
+  The divisor is the count of uploads the server actually aggregated —
+  dropout-aware renormalization falls out of counting, not a special case.
+* ``trimmed_mean`` — per-coordinate trimmed mean, streamed: the carry
+  holds the running sum plus the ``trim_k`` largest/smallest values seen
+  per coordinate (a [trim_k, n_params] pair), merged chunk-by-chunk with a
+  sort — O(trim_k · n_params) state regardless of cohort size. Finalize
+  subtracts the extremes and divides by (cnt − 2·trim_k). Neutralizes a
+  minority of sign-flip/scaled attackers because their inflated values
+  land in the trimmed extremes.
+* ``norm_clip`` — upload-norm clipping: each accepted upload is scaled by
+  min(1, C/‖u‖) before the mean fold. ``C=None`` resolves to the round's
+  MEDIAN accepted-upload norm (a robust location estimate the attackers
+  cannot inflate below 50% corruption). Norms come free from the decoded
+  sparse values, so this is the mean fold with host-computed row weights.
+
+Each aggregator owns small jitted kernels (one trace per chunk shape —
+the same rung ladder that bounds the executor's cache bounds these), all
+f32, with the carry donated through the fold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import wire as W
+
+AGGREGATIONS = ("mean", "trimmed_mean", "norm_clip")
+
+
+def weighted_row_fold(acc, ups, w):
+    """Left-to-right weighted row accumulation with a FIXED association:
+    ``((acc + ups[0]·w[0]) + ups[1]·w[1]) + …`` via ``lax.fori_loop``.
+    ``jnp.sum`` lowers to a ``reduce`` whose evaluation order XLA picks
+    per surrounding graph — the fused tier-chunk step and this module's
+    server-side replay would then disagree at the ulp level. Both sides
+    call THIS fold, so the association is pinned and zero-fault wire
+    rounds stay bit-identical to the in-process engine."""
+    def body(i, a):
+        return a + ups[i] * w[i]
+    return jax.lax.fori_loop(0, ups.shape[0], body, acc)
+
+
+class MeanAggregator:
+    """The fused engine's upload fold, replayed server-side. ``update``
+    uses the identical expression (and fold order — the caller replays
+    chunk order) as the in-process tier-chunk accumulate, ``finalize`` the
+    identical expression as the executor's finalizer: zero-fault wire
+    rounds are bit-identical to the legacy path."""
+
+    needs_norms = False
+
+    def __init__(self):
+        self._update = jax.jit(weighted_row_fold, donate_argnums=(0,))
+        self._final = jax.jit(
+            lambda g, acc, cnt: g - acc / jnp.maximum(cnt, 1.0),
+            donate_argnums=(0,))
+
+    def init(self, n_params: int):
+        return jnp.zeros(n_params, jnp.float32)
+
+    def update(self, carry, ups: np.ndarray, w: np.ndarray):
+        return self._update(carry, jnp.asarray(ups), jnp.asarray(w))
+
+    def finalize(self, global_f, carry, cnt: int):
+        return self._final(global_f, carry, jnp.float32(cnt))
+
+
+class TrimmedMeanAggregator:
+    """Per-coordinate trimmed mean over the chunk stream. The carry is
+    (sum [n], hi [trim_k, n], lo [trim_k, n]); each chunk merges its rows
+    into the extreme buffers via a sort (masked rows enter as ∓inf so they
+    never survive). Finalize subtracts the finite extremes per coordinate
+    and renormalizes by the surviving count."""
+
+    needs_norms = False
+
+    def __init__(self, trim_k: int):
+        if trim_k < 1:
+            raise ValueError(f"trim_k must be >= 1, got {trim_k}")
+        self.trim_k = k = int(trim_k)
+
+        def update(carry, ups, w):
+            s, hi, lo = carry
+            valid = w[:, None] > 0
+            s = s + jnp.sum(ups * w[:, None], axis=0)
+            hi = -jnp.sort(-jnp.concatenate(
+                [hi, jnp.where(valid, ups, -jnp.inf)]), axis=0)[:k]
+            lo = jnp.sort(jnp.concatenate(
+                [lo, jnp.where(valid, ups, jnp.inf)]), axis=0)[:k]
+            return s, hi, lo
+
+        def final(g, carry, cnt):
+            s, hi, lo = carry
+            hi_fin = jnp.isfinite(hi)
+            lo_fin = jnp.isfinite(lo)
+            trimmed = (s - jnp.sum(jnp.where(hi_fin, hi, 0.0), axis=0)
+                       - jnp.sum(jnp.where(lo_fin, lo, 0.0), axis=0))
+            kept = cnt - (jnp.sum(hi_fin, axis=0)
+                          + jnp.sum(lo_fin, axis=0)).astype(jnp.float32)
+            return g - trimmed / jnp.maximum(kept, 1.0)
+
+        self._update = jax.jit(update, donate_argnums=(0,))
+        self._final = jax.jit(final, donate_argnums=(0,))
+
+    def init(self, n_params: int):
+        return (jnp.zeros(n_params, jnp.float32),
+                jnp.full((self.trim_k, n_params), -jnp.inf, jnp.float32),
+                jnp.full((self.trim_k, n_params), jnp.inf, jnp.float32))
+
+    def update(self, carry, ups: np.ndarray, w: np.ndarray):
+        return self._update(carry, jnp.asarray(ups), jnp.asarray(w))
+
+    def finalize(self, global_f, carry, cnt: int):
+        return self._final(global_f, carry, jnp.float32(cnt))
+
+
+class NormClipAggregator(MeanAggregator):
+    """Mean fold with per-upload norm clipping: the server computes each
+    accepted upload's norm from its decoded sparse values (‖sparse‖ =
+    ‖dense‖) and folds min(1, C/‖u‖) into the row weight. The clipped
+    row still counts as one upload in the divisor."""
+
+    needs_norms = True
+
+    def __init__(self, clip_norm: float | None = None):
+        super().__init__()
+        self.clip_norm = clip_norm
+
+    def scales(self, norms: np.ndarray) -> np.ndarray:
+        """Per-upload weights for this round, given every accepted
+        upload's norm (median-of-round when no fixed C is configured)."""
+        norms = np.asarray(norms, np.float64)
+        if not len(norms):
+            return np.zeros(0, np.float32)
+        c = (float(np.median(norms)) if self.clip_norm is None
+             else float(self.clip_norm))
+        return np.minimum(1.0, c / np.maximum(norms, 1e-30)) \
+            .astype(np.float32)
+
+
+def make_aggregator(name: str, *, cohort: int, trim_frac: float = 0.1,
+                    clip_norm: float | None = None):
+    if name == "mean":
+        return MeanAggregator()
+    if name == "trimmed_mean":
+        trim_k = max(1, int(round(trim_frac * cohort)))
+        if 2 * trim_k >= cohort:
+            raise ValueError(
+                f"trim_frac={trim_frac} trims 2×{trim_k} of a {cohort}-"
+                "participant cohort — nothing left to average")
+        return TrimmedMeanAggregator(trim_k)
+    if name == "norm_clip":
+        return NormClipAggregator(clip_norm)
+    raise ValueError(f"unknown aggregation {name!r}; "
+                     f"want one of {AGGREGATIONS}")
+
+
+def decode_and_aggregate(payloads, n_params: int, agg=None,
+                         chunk: int = 64):
+    """Server hot loop over a batch of serialized uploads: decode + CRC
+    check each, densify into [chunk, n_params] blocks, fold through the
+    aggregator. Returns (aggregate delta [n_params] np, n_ok, n_bad).
+
+    This is the throughput kernel the fig11 load generator hammers — it is
+    exactly what the wire round does per chunk, minus the fault protocol."""
+    agg = agg or MeanAggregator()
+    carry = agg.init(n_params)
+    dense = np.zeros((chunk, n_params), np.float32)
+    w = np.zeros(chunk, np.float32)
+    fill = 0
+    n_ok = n_bad = 0
+
+    def flush():
+        nonlocal carry, fill
+        carry = agg.update(carry, dense, w)
+        dense[:fill] = 0.0
+        w[:fill] = 0.0
+        fill = 0
+
+    for payload in payloads:
+        try:
+            u = W.decode_upload(payload)
+        except W.WireError:
+            n_bad += 1
+            continue
+        dense[fill, u.indices] = u.values
+        w[fill] = 1.0
+        fill += 1
+        n_ok += 1
+        if fill == chunk:
+            flush()
+    if fill:
+        flush()
+    zero = jnp.zeros(n_params, jnp.float32)
+    delta = np.asarray(agg.finalize(zero, carry, max(n_ok, 1)))
+    return -delta, n_ok, n_bad

@@ -24,6 +24,12 @@ This module is the stable public surface of the **layered round engine**
 * `repro.fl.driver` — `SimConfig`, `History`, `RoundPkg`, `Simulator`:
   the pipelined double-buffered round loop, per-round SeedSequence RNG
   streams, Eq.-7 time/waiting + payload-faithful traffic accounting.
+* `repro.fl.wire` / `repro.fl.faults` / `repro.fl.robust` — the
+  wire-boundary fault engine (DESIGN.md §11): serialized upload codec +
+  transports, dropout/straggler/corruption/Byzantine injection, robust
+  server aggregation (mean / trimmed_mean / norm_clip). Enabled with
+  ``SimConfig(wire="loopback")``; zero faults are bit-identical to the
+  in-process path.
 
 Import from HERE (``from repro.fl.simulation import Simulator, SimConfig``)
 — every name below is re-exported unchanged, so the decomposition is
@@ -35,13 +41,19 @@ from repro.fl.driver import (History, RoundPkg, SimConfig,  # noqa: F401
                              Simulator)
 from repro.fl.executor import (BUFFER_DTYPES, EF_EXTRA_ARRAYS,  # noqa: F401
                                RoundExecutor, TierGroup)
+from repro.fl.faults import FaultConfig, FaultPlan  # noqa: F401
 from repro.fl.planner import RoundPlanner  # noqa: F401
+from repro.fl.robust import AGGREGATIONS, make_aggregator  # noqa: F401
 from repro.fl.state import ClientStateStore  # noqa: F401
+from repro.fl.wire import WireUpload, decode_upload, encode_upload  # noqa: F401
 
 __all__ = [
+    "AGGREGATIONS",
     "BUFFER_DTYPES",
     "EF_EXTRA_ARRAYS",
     "ClientStateStore",
+    "FaultConfig",
+    "FaultPlan",
     "History",
     "RoundExecutor",
     "RoundPkg",
@@ -49,4 +61,8 @@ __all__ = [
     "SimConfig",
     "Simulator",
     "TierGroup",
+    "WireUpload",
+    "decode_upload",
+    "encode_upload",
+    "make_aggregator",
 ]

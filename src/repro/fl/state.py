@@ -171,7 +171,8 @@ class ClientStateStore:
                  *, ef_width: int = 0, dtype=jnp.float32,
                  capacity: int | None = None, cohort: int = 1,
                  n_shards: int = 1, mesh=None, offload: str = "none",
-                 offload_dir=None, n_tiers: int = DEFAULT_N_TIERS):
+                 offload_dir=None, n_tiers: int = DEFAULT_N_TIERS,
+                 volumes=None, measure_restore_error: bool = False):
         if n_clients % max(n_shards, 1):
             raise ValueError(f"n_clients ({n_clients}) must divide over "
                              f"{n_shards} shards")
@@ -218,9 +219,30 @@ class ClientStateStore:
         self.evicted_tier = np.full(self.n_clients, -1, np.int8)
         self.centroids = np.zeros((self.n_tiers, self.n_params), np.float32)
         self.centroid_n = np.zeros(self.n_tiers, np.int64)
+        self.centroid_w = np.zeros(self.n_tiers, np.float64)
+        # centroid fold weights: evicted rows enter their tier centroid
+        # weighted by client sample volume (a 10×-data client's stale model
+        # should dominate its cluster's restore point). Normalized by the
+        # population mean so uniform volumes reduce to EXACT weight 1.0 —
+        # bit-identical to the unweighted fold (pinned in
+        # tests/test_state_store.py).
+        if volumes is None:
+            self.row_weight = np.ones(self.n_clients, np.float64)
+        else:
+            v = np.asarray(volumes, np.float64)
+            if v.shape != (self.n_clients,):
+                raise ValueError("volumes must be [n_clients]")
+            self.row_weight = v / v.mean()
         self.offloader = (None if offload == "none" else
                           _OffloadStore(offload, self.n_params,
                                         self.ef_width, offload_dir))
+        # eviction-error telemetry (ROADMAP item 1): shadow the exact
+        # evicted rows host-side so a later centroid restore can record
+        # ||restored − true|| / ||true||. Diagnostic only — the restore
+        # still hands out the centroid.
+        self.measure_restore_error = bool(measure_restore_error)
+        self.restore_errors: list[float] = []
+        self._shadow: dict[int, np.ndarray] = {}
         # telemetry
         self.n_evictions = 0
         self.n_grows = 0
@@ -406,14 +428,22 @@ class ClientStateStore:
                else np.zeros((len(victims), 0), np.float32))
         tier = self._staleness_tier(victims, t)
         for k in np.unique(tier):
-            sel = rows[tier == k]
-            n0 = self.centroid_n[k]
-            self.centroids[k] = (n0 * self.centroids[k] + sel.sum(axis=0)) \
-                / (n0 + len(sel))
-            self.centroid_n[k] = n0 + len(sel)
+            m = tier == k
+            sel = rows[m]
+            wv = self.row_weight[victims[m]]
+            w0 = self.centroid_w[k]
+            sw = wv.sum()
+            self.centroids[k] = (w0 * self.centroids[k]
+                                 + (sel * wv[:, None]).sum(axis=0)) \
+                / (w0 + sw)
+            self.centroid_w[k] = w0 + sw
+            self.centroid_n[k] += int(m.sum())
         if self.offloader is not None:
             for i, c in enumerate(victims):
                 self.offloader.put(int(c), rows[i], efs[i])
+        if self.measure_restore_error and self.offloader is None:
+            for i, c in enumerate(victims):
+                self._shadow[int(c)] = rows[i].copy()
         self.evicted_tier[victims] = tier
         self.client_of[slots_v] = -1
         self.slot_of[victims] = -1
@@ -442,6 +472,12 @@ class ClientStateStore:
             elif self.evicted_tier[c] >= 0:
                 rows[i] = self.centroids[self.evicted_tier[c]]
                 self.n_restore_centroid += 1
+                true = self._shadow.pop(int(c), None)
+                if true is not None:
+                    tn = float(np.linalg.norm(true))
+                    self.restore_errors.append(
+                        float(np.linalg.norm(rows[i] - true))
+                        / max(tn, 1e-30))
             else:
                 rows[i] = self.init_row
                 self.n_restore_fresh += 1
@@ -479,6 +515,7 @@ class ClientStateStore:
             "evicted_tier": self.evicted_tier.astype(np.int8).copy(),
             "centroids": self.centroids.copy(),
             "centroid_n": self.centroid_n.copy(),
+            "centroid_w": self.centroid_w.copy(),
             "offload_clients": off_cids,
             "offload_rows": off_rows,
             "counters": np.array([self.n_evictions, self.n_grows,
@@ -504,6 +541,10 @@ class ClientStateStore:
         self.evicted_tier = np.asarray(d["evicted_tier"], np.int8).copy()
         self.centroids = np.asarray(d["centroids"], np.float32).copy()
         self.centroid_n = np.asarray(d["centroid_n"], np.int64).copy()
+        # pre-weighting checkpoints carry no centroid_w: every historical
+        # fold was unit-weight, so the count IS the accumulated weight
+        self.centroid_w = np.asarray(
+            d.get("centroid_w", self.centroid_n), np.float64).copy()
         (self.n_evictions, self.n_grows, self.n_restore_fresh,
          self.n_restore_centroid, self.n_restore_offload) = (
             int(x) for x in np.asarray(d["counters"]))
@@ -525,6 +566,13 @@ class ClientStateStore:
                          "offload": self.n_restore_offload},
             "offloaded": (len(self.offloader.row_of) if self.offloader
                           else 0),
+            **({"restore_error": {
+                "count": len(self.restore_errors),
+                "mean": (float(np.mean(self.restore_errors))
+                         if self.restore_errors else 0.0),
+                "max": (float(np.max(self.restore_errors))
+                        if self.restore_errors else 0.0)}}
+               if self.measure_restore_error else {}),
             "pool_mb": self.capacity * (self.n_params * itemsize
                                         + self.ef_width * 4) / 2**20,
             "dense_mb": self.n_clients * (self.n_params * itemsize

@@ -1,0 +1,11 @@
+"""Must-fail fixture for REP009: fault draws keyed off foreign kinds."""
+from repro.core import rng as RNG
+
+
+def plan_round(seed, t, parts):
+    # wrong kind: couples the fault schedule to the sampling stream
+    rng = RNG.stream(seed, RNG.KIND_SAMPLING, t)
+    u = rng.random(len(parts))
+    # no kind at all: the root-stream bug at the wire boundary
+    rng2 = RNG.stream(seed)
+    return u, rng2.random()

@@ -1,0 +1,10 @@
+"""Must-pass twin for REP009: every draw keyed by KIND_FAULTS."""
+from repro.core import rng as RNG
+
+
+def plan_round(seed, t, parts, client):
+    rng = RNG.stream(seed, RNG.KIND_FAULTS, t)
+    u = rng.random(len(parts))
+    noise = RNG.stream(seed, RNG.KIND_FAULTS, t, client).normal()
+    seq = RNG.sequence(seed, RNG.KIND_FAULTS, t, client)
+    return u, noise, seq

@@ -24,9 +24,10 @@ from repro.core import rng as RNG
 FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
-# REP005 is scoped to device-math modules; its fixtures are linted under
-# a synthetic in-scope path
-_LINT_PATH = {"REP005": "src/repro/core/{name}"}
+# REP005 is scoped to device-math modules and REP009 to the wire/fault
+# modules; their fixtures are linted under synthetic in-scope paths
+_LINT_PATH = {"REP005": "src/repro/core/{name}",
+              "REP009": "src/repro/fl/faults.py"}
 
 
 def _lint_fixture(code: str, which: str):

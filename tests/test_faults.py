@@ -1,0 +1,309 @@
+"""Fault engine + robust aggregation (DESIGN.md §11).
+
+* fault plans are pure functions of (cfg, seed, KIND_FAULTS, t) — replay
+  determinism is what makes checkpoint/resume under faults exact;
+* ``round_times_np`` is the worker's numpy twin of the Eq.-7 jax model;
+* zero faults through the serialized loopback wire are BIT-identical to
+  the in-process engine (the tentpole invariant, also CI-gated via
+  ``fig11_faults --smoke``);
+* aggregator math vs plain-numpy references, chunking-invariance, and
+  trimmed-mean neutralizing a sign-flip minority that yanks plain mean;
+* checkpoint mid-run under an ACTIVE fault schedule: the resumed run
+  redraws identical dropout/Byzantine/corruption outcomes and lands on
+  the bit-identical global model.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import batchsize as BS
+from repro.core import rng as RNG
+from repro.core.caesar import CaesarConfig
+from repro.fl import faults as F
+from repro.fl import robust as RB
+from repro.fl.simulation import SimConfig, Simulator
+
+
+def _cfg(**kw):
+    base = dict(dataset="oppo_ts", rounds=4, n_clients=12, data_scale=0.01,
+                eval_every=2, participation=0.5, seed=0,
+                dataset_kwargs={"n_features": 64},
+                caesar=CaesarConfig(tau=2, b_max=8,
+                                    use_error_feedback=True))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+class TestFaultPlanning:
+    def test_round_times_np_matches_eq7(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 1)
+        p = 16
+        td = rng.random(p).astype(np.float32)
+        tu = rng.random(p).astype(np.float32)
+        bd = (1e6 * (1 + rng.random(p))).astype(np.float32)
+        bu = (1e5 * (1 + rng.random(p))).astype(np.float32)
+        batch = rng.integers(1, 32, p).astype(np.float32)
+        mu = (1e-4 * (1 + rng.random(p))).astype(np.float32)
+        ref = np.asarray(BS.round_times(
+            jnp.asarray(td), jnp.asarray(tu), 1e6, jnp.asarray(bd),
+            jnp.asarray(bu), 3, jnp.asarray(batch), jnp.asarray(mu)))
+        got = F.round_times_np(td, tu, 1e6, bd, bu, 3, batch, mu)
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+    def test_plan_is_deterministic(self):
+        cfg = F.FaultConfig(dropout_rate=0.3, corrupt_rate=0.3,
+                            byzantine_frac=0.25, straggler_deadline=1.2,
+                            late_policy="defer")
+        byz = F.byzantine_members(cfg, seed=4, n_clients=40)
+        parts = np.array([3, 11, 17, 23, 31, 39])
+        times = RNG.stream(1, RNG.KIND_FAULTS, 7).random(len(parts))
+        a = F.plan_faults(cfg, 4, 9, parts, times, byz)
+        b = F.plan_faults(cfg, 4, 9, parts, times, byz)
+        np.testing.assert_array_equal(a.status, b.status)
+        np.testing.assert_array_equal(a.byz, b.byz)
+        np.testing.assert_array_equal(a.corrupt_first, b.corrupt_first)
+        assert a.deadline == b.deadline
+        # different round ⇒ different draws (overwhelmingly)
+        c = F.plan_faults(cfg, 4, 10, parts, times, byz)
+        assert (not np.array_equal(a.status, c.status)
+                or not np.array_equal(a.corrupt_first, c.corrupt_first))
+
+    def test_byzantine_membership_is_persistent_and_sized(self):
+        cfg = F.FaultConfig(byzantine_frac=0.2)
+        m1 = F.byzantine_members(cfg, seed=0, n_clients=50)
+        m2 = F.byzantine_members(cfg, seed=0, n_clients=50)
+        np.testing.assert_array_equal(m1, m2)
+        assert m1.sum() == 10
+
+    def test_dropout_trumps_lateness(self):
+        cfg = F.FaultConfig(dropout_rate=1.0, straggler_deadline=0.5,
+                            late_policy="defer")
+        parts = np.arange(8)
+        times = np.linspace(1, 10, 8)
+        fp = F.plan_faults(cfg, 0, 1, parts, times,
+                           np.zeros(16, bool))
+        assert (fp.status == F.DROP).all()
+        assert not fp.adopt.any() and not fp.uploads_sent().any()
+
+    def test_deadline_is_median_scaled(self):
+        cfg = F.FaultConfig(straggler_deadline=1.5, late_policy="discard")
+        times = np.array([1.0, 2.0, 3.0, 4.0, 100.0])
+        fp = F.plan_faults(cfg, 0, 1, np.arange(5), times,
+                           np.zeros(8, bool))
+        assert fp.deadline == pytest.approx(1.5 * 3.0)
+        np.testing.assert_array_equal(fp.status == F.LATE,
+                                      times > fp.deadline)
+        # discarded stragglers still sent bytes but never adopt
+        assert fp.uploads_sent()[4] and not fp.adopt[4]
+
+    def test_deadline_requires_times(self):
+        cfg = F.FaultConfig(straggler_deadline=1.5)
+        with pytest.raises(ValueError):
+            F.plan_faults(cfg, 0, 1, np.arange(4), None, np.zeros(8, bool))
+
+
+class TestAggregators:
+    def _chunks(self, ups, w, sizes):
+        i = 0
+        for c in sizes:
+            yield ups[i:i + c], w[i:i + c]
+            i += c
+
+    def test_mean_matches_numpy(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 2)
+        ups = rng.normal(0, 1, (10, 33)).astype(np.float32)
+        w = (rng.random(10) > 0.3).astype(np.float32)
+        agg = RB.MeanAggregator()
+        carry = agg.init(33)
+        for u_c, w_c in self._chunks(ups, w, [4, 4, 2]):
+            carry = agg.update(carry, u_c, w_c)
+        g = np.zeros(33, np.float32)
+        out = np.asarray(agg.finalize(jnp.asarray(g), carry,
+                                      int(w.sum())))
+        ref = -(ups * w[:, None]).sum(0) / w.sum()
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+    def test_trimmed_mean_matches_numpy_reference(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 3)
+        n, d, k = 12, 29, 2
+        ups = rng.normal(0, 1, (n, d)).astype(np.float32)
+        w = np.ones(n, np.float32)
+        agg = RB.TrimmedMeanAggregator(trim_k=k)
+        carry = agg.init(d)
+        for u_c, w_c in self._chunks(ups, w, [5, 5, 2]):
+            carry = agg.update(carry, u_c, w_c)
+        out = np.asarray(agg.finalize(jnp.zeros(d, jnp.float32), carry, n))
+        s = np.sort(ups, axis=0)[k:n - k]       # trim k hi + k lo per coord
+        ref = -s.mean(axis=0)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-6)
+
+    def test_trimmed_mean_chunking_invariant(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 4)
+        ups = rng.normal(0, 1, (9, 17)).astype(np.float32)
+        w = np.ones(9, np.float32)
+        outs = []
+        for sizes in ([9], [3, 3, 3], [1] * 9, [4, 5]):
+            agg = RB.TrimmedMeanAggregator(trim_k=2)
+            carry = agg.init(17)
+            for u_c, w_c in self._chunks(ups, w, sizes):
+                carry = agg.update(carry, u_c, w_c)
+            outs.append(np.asarray(
+                agg.finalize(jnp.zeros(17, jnp.float32), carry, 9)))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-7)
+
+    def test_norm_clip_scales(self):
+        agg = RB.NormClipAggregator(clip_norm=None)
+        norms = np.array([1.0, 2.0, 4.0, 100.0])
+        sc = agg.scales(norms)        # median C = 3.0
+        np.testing.assert_allclose(sc, np.minimum(1.0, 3.0 / norms),
+                                   rtol=1e-6)
+        fixed = RB.NormClipAggregator(clip_norm=2.0)
+        np.testing.assert_allclose(fixed.scales(norms),
+                                   np.minimum(1.0, 2.0 / norms), rtol=1e-6)
+        assert len(agg.scales(np.zeros(0))) == 0
+
+    def test_make_aggregator_validates(self):
+        with pytest.raises(ValueError):
+            RB.make_aggregator("median_of_means", cohort=10)
+        with pytest.raises(ValueError):
+            # trimming 2×1 of a 2-cohort leaves nothing
+            RB.make_aggregator("trimmed_mean", cohort=2)
+
+    def test_decode_and_aggregate_counts_and_mean(self):
+        from repro.fl import wire as W
+        n_params = 40
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 5)
+        dense = []
+        payloads = []
+        for i in range(5):
+            idx = rng.choice(n_params, size=7, replace=False)
+            vals = rng.normal(0, 1, 7).astype(np.float32)
+            payloads.append(W.encode_upload(
+                idx, vals, client=i, round_=0, n_params=n_params))
+            row = np.zeros(n_params, np.float32)
+            row[idx] = vals
+            dense.append(row)
+        payloads.append(b"garbage-frame")
+        delta, n_ok, n_bad = RB.decode_and_aggregate(payloads, n_params,
+                                                     chunk=2)
+        assert (n_ok, n_bad) == (5, 1)
+        np.testing.assert_allclose(delta, np.mean(dense, axis=0),
+                                   rtol=1e-5, atol=1e-7)
+
+
+class TestWireRoundSemantics:
+    def test_zero_faults_bit_identical_to_inproc(self):
+        s0 = Simulator(_cfg(wire="inproc"))
+        h0 = s0.run()
+        s1 = Simulator(_cfg(wire="loopback"))
+        h1 = s1.run()
+        assert h0.accuracy == h1.accuracy
+        assert h0.traffic_bits == h1.traffic_bits
+        assert h0.sim_time == h1.sim_time
+        np.testing.assert_array_equal(np.asarray(s0.global_flat),
+                                      np.asarray(s1.global_flat))
+        np.testing.assert_array_equal(np.asarray(s0.store.pool),
+                                      np.asarray(s1.store.pool))
+        # the wire run measured real serialized bytes
+        assert h1.wire_bits and h1.wire_bits[-1] > 0
+        assert not h0.wire_bits
+
+    def test_wire_requires_ragged_caesar(self):
+        with pytest.raises(ValueError):
+            Simulator(_cfg(wire="loopback", ragged=False))
+        with pytest.raises(ValueError):
+            Simulator(_cfg(wire="teleport"))
+        with pytest.raises(ValueError):
+            # faults without a wire boundary have nothing to corrupt
+            Simulator(_cfg(faults=F.FaultConfig(dropout_rate=0.1)))
+        with pytest.raises(ValueError):
+            Simulator(_cfg(aggregation="trimmed_mean"))
+
+    def test_dropout_renormalizes_and_logs(self):
+        fc = F.FaultConfig(dropout_rate=0.4)
+        sim = Simulator(_cfg(wire="loopback", faults=fc, seed=3))
+        h = sim.run()
+        status = np.concatenate([e["status"] for e in sim.fault_log])
+        assert (status == F.DROP).any() and (status == F.OK).any()
+        assert np.isfinite(h.accuracy[-1])
+        # dropped uploads never hit the wire: fewer measured bytes than
+        # the zero-fault twin
+        clean = Simulator(_cfg(wire="loopback", seed=3))
+        hc = clean.run()
+        assert h.wire_bits[-1] < hc.wire_bits[-1]
+
+    def test_corruption_retry_prices_traffic(self):
+        fc = F.FaultConfig(corrupt_rate=1.0)   # every first send corrupted
+        sim = Simulator(_cfg(wire="loopback", faults=fc, seed=1))
+        h = sim.run()
+        clean = Simulator(_cfg(wire="loopback", seed=1))
+        hc = clean.run()
+        # every upload retransmitted once ⇒ about double the wire bytes
+        # (exactly double minus the double-corrupted drops' lost retries)
+        assert h.wire_bits[-1] > 1.5 * hc.wire_bits[-1]
+        crc_drops = sum(e["n_crc_dropped"] for e in sim.fault_log)
+        sent = sum((e["status"] != F.DROP).sum() for e in sim.fault_log)
+        agg = sum(e["n_aggregated"] for e in sim.fault_log)
+        assert agg == sent - crc_drops
+
+    def test_straggler_defer_folds_next_round(self):
+        fc = F.FaultConfig(straggler_deadline=1.01, late_policy="defer")
+        sim = Simulator(_cfg(wire="loopback", faults=fc, rounds=5))
+        sim.run()
+        d_out = [e["n_deferred_out"] for e in sim.fault_log]
+        d_in = [e["n_deferred_in"] for e in sim.fault_log]
+        assert sum(d_out) > 0
+        # conservation: what round t defers arrives at round t+1
+        assert d_in[1:] == d_out[:-1] and d_in[0] == 0
+
+
+class TestSignFlipNeutralization:
+    def test_trimmed_mean_and_norm_clip_stay_near_clean(self):
+        def final_global(aggregation, byz):
+            fc = F.FaultConfig(byzantine_frac=byz, attack="sign_flip",
+                               attack_scale=10.0)
+            sim = Simulator(_cfg(wire="loopback", faults=fc, rounds=6,
+                                 aggregation=aggregation))
+            sim.run()
+            return np.asarray(sim.global_flat)
+
+        g_clean = final_global("mean", 0.0)
+        g_mean = final_global("mean", 0.1)
+        ref = np.linalg.norm(g_clean)
+        dev_mean = np.linalg.norm(g_mean - g_clean) / ref
+        for robust in ("trimmed_mean", "norm_clip"):
+            dev = np.linalg.norm(final_global(robust, 0.1) - g_clean) / ref
+            assert dev < 0.5 * dev_mean, (robust, dev, dev_mean)
+
+
+class TestCheckpointUnderFaults:
+    FC = F.FaultConfig(dropout_rate=0.2, straggler_deadline=1.5,
+                       late_policy="defer", corrupt_rate=0.3,
+                       byzantine_frac=0.2, attack="sign_flip",
+                       attack_scale=5.0)
+
+    def test_resume_replays_identical_fault_schedule(self):
+        kw = dict(wire="loopback", faults=self.FC,
+                  aggregation="trimmed_mean", rounds=6)
+        ref = Simulator(_cfg(**kw))
+        ref.run()
+
+        first = Simulator(_cfg(**{**kw, "rounds": 3}))
+        first.run()
+        snap = first.state_dict()
+
+        resumed = Simulator(_cfg(**kw))
+        resumed.load_state_dict(snap)
+        resumed.run(start_round=4)
+
+        np.testing.assert_array_equal(np.asarray(resumed.global_flat),
+                                      np.asarray(ref.global_flat))
+        assert len(resumed.fault_log) == len(ref.fault_log) == 6
+        for a, b in zip(resumed.fault_log, ref.fault_log):
+            np.testing.assert_array_equal(a["parts"], b["parts"])
+            np.testing.assert_array_equal(a["status"], b["status"])
+            np.testing.assert_array_equal(a["byz"], b["byz"])
+            assert a["wire_bytes"] == b["wire_bytes"]
+            assert a["n_crc_dropped"] == b["n_crc_dropped"]

@@ -320,3 +320,62 @@ class TestStochasticRoundCast:
         # far closer to x than RNE's deterministic pick
         assert abs(outs.mean() - 4.0 / 3.0) < (vals.max() - vals.min()) / 8
 
+
+
+class TestVolumeWeightedCentroids:
+    """Eviction folds are volume-weighted (row_weight = v / mean(v)):
+    uniform volumes must be EXACTLY weight 1.0 — bit-identical to the
+    unweighted fold — while non-uniform volumes bias the centroid toward
+    data-rich clients. Plus the shadow-row restore_error probe."""
+
+    def test_uniform_volumes_bit_identical_to_none(self):
+        seq = [[0, 1, 2, 3], [4, 5, 6, 7], [0, 2, 9, 10], [1, 3, 5, 11]]
+        cap = dict(n_clients=16, capacity=6, cohort=4)
+        st_a = _mk_store(**cap)
+        st_b = _mk_store(volumes=np.full(16, 7.0, np.float64), **cap)
+        for t, parts in enumerate(seq, 1):
+            for st in (st_a, st_b):
+                _write_rows(st, parts, t)
+        np.testing.assert_array_equal(st_a.centroids, st_b.centroids)
+        np.testing.assert_array_equal(st_a.centroid_w, st_b.centroid_w)
+        np.testing.assert_array_equal(np.asarray(st_a.pool),
+                                      np.asarray(st_b.pool))
+
+    def test_nonuniform_volumes_weight_the_fold(self):
+        vols = np.ones(16, np.float64)
+        vols[0], vols[1] = 3.0, 1.0
+        st = _mk_store(n_clients=16, capacity=2, cohort=2, volumes=vols)
+        rows = _write_rows(st, [0, 1], t=1)
+        st.prepare(np.array([4, 5]), 10)     # evicts 0 and 1 (same tier)
+        tier = int(st.evicted_tier[0])
+        assert int(st.evicted_tier[1]) == tier
+        w = vols[:2] / vols.mean()
+        expect = (rows * w[:, None]).sum(0) / w.sum()
+        np.testing.assert_allclose(st.centroids[tier], expect, rtol=1e-6)
+        # and NOT the unweighted mean
+        assert not np.allclose(st.centroids[tier], rows.mean(0), rtol=1e-4)
+
+    def test_restore_error_telemetry(self):
+        st = _mk_store(n_clients=16, capacity=2, cohort=2,
+                       measure_restore_error=True)
+        rows = _write_rows(st, [0, 1], t=1)
+        st.prepare(np.array([4, 5]), 10)     # evict 0, 1 → shadow rows
+        st.prepare(np.array([0]), 11)        # centroid restore, measured
+        tel = st.telemetry()["restore_error"]
+        assert tel["count"] == 1
+        true = rows[0]
+        approx = _row(st, 0)
+        expect = np.linalg.norm(approx - true) / np.linalg.norm(true)
+        assert tel["mean"] == pytest.approx(expect, rel=1e-6)
+        assert tel["max"] == pytest.approx(expect, rel=1e-6)
+
+    def test_driver_passes_dirichlet_volumes(self):
+        sim = Simulator(SimConfig(
+            dataset="oppo_ts", rounds=1, n_clients=12, data_scale=0.01,
+            eval_every=1, participation=0.5, seed=0,
+            dataset_kwargs={"n_features": 64},
+            caesar=CaesarConfig(tau=1, b_max=8)))
+        sim.run()
+        # dirichlet splits are non-uniform ⇒ the store folds weighted
+        assert sim.store.row_weight.shape == (12,)
+        assert not np.allclose(sim.store.row_weight, 1.0)
