@@ -3,10 +3,10 @@ from repro.analysis.rules.hotloop import REP006
 from repro.analysis.rules.jaxsafe import REP004, REP005, REP007
 from repro.analysis.rules.rng import REP001, REP002
 from repro.analysis.rules.threads import REP003, REP008
-from repro.analysis.rules.wirekind import REP009
+from repro.analysis.rules.wirekind import REP009, REP010
 
 ALL_RULES = [REP001(), REP002(), REP003(), REP004(), REP005(), REP006(),
-             REP007(), REP008(), REP009()]
+             REP007(), REP008(), REP009(), REP010()]
 
 __all__ = ["ALL_RULES", "REP001", "REP002", "REP003", "REP004", "REP005",
-           "REP006", "REP007", "REP008", "REP009"]
+           "REP006", "REP007", "REP008", "REP009", "REP010"]

@@ -1,4 +1,4 @@
-"""REP009 — wire/fault modules draw ONLY from the KIND_FAULTS stream.
+"""REP009/REP010 — fault-engine modules draw ONLY from KIND_FAULTS.
 
 The wire-boundary engine's resume guarantee (a mid-run checkpoint restore
 replays the identical dropout/Byzantine/corruption schedule) holds because
@@ -7,9 +7,15 @@ wall state, no shared generator, no other kind. A draw in fl/faults.py,
 fl/wire.py or fl/robust.py that keys any OTHER kind would silently couple
 the fault schedule to an unrelated consumer's stream (the pre-PR-8
 aliasing bug, reborn at the wire boundary), and a draw with no kind at all
-is REP001's root-stream bug. This rule pins the discipline structurally:
+is REP001's root-stream bug. REP009 pins the discipline structurally:
 inside the wire modules, every ``stream``/``sequence`` call must name
 ``KIND_FAULTS`` as its kind argument.
+
+REP010 extends the same contract to ``fl/availability.py``: the diurnal
+availability schedule must replay identically across a checkpoint restore
+too (DESIGN.md §12), so its draws share the KIND_FAULTS kind — in the
+disjoint ``STEP_AVAIL = 1 << 20`` step namespace — rather than minting a
+new kind the resume machinery would not know to re-key.
 """
 from __future__ import annotations
 
@@ -20,10 +26,11 @@ from repro.analysis.lint import Rule, terminal_name
 _STREAM_FNS = {"stream", "sequence"}
 
 
-class REP009(Rule):
-    code = "REP009"
-    summary = "wire/fault RNG draw not keyed by KIND_FAULTS"
-    scope = ("fl/wire.py", "fl/faults.py", "fl/robust.py")
+class _KindFaultsRule(Rule):
+    """Shared check: every stream()/sequence() call in scope must name
+    KIND_FAULTS as its kind (positional arg 1 or ``kind=`` keyword)."""
+
+    what = "wire/fault"
 
     def check(self, src):
         for node in ast.walk(src.tree):
@@ -38,11 +45,25 @@ class REP009(Rule):
             if kind is None:
                 yield self.diag(
                     src, node,
-                    "RNG stream without a kind argument — wire/fault draws "
-                    "must key (seed, KIND_FAULTS, ...)")
+                    f"RNG stream without a kind argument — {self.what} "
+                    "draws must key (seed, KIND_FAULTS, ...)")
             elif terminal_name(kind) != "KIND_FAULTS":
                 yield self.diag(
                     src, node,
-                    "wire/fault modules own exactly one RNG kind; key this "
-                    "draw with KIND_FAULTS (repro.core.rng), not "
+                    f"{self.what} modules own exactly one RNG kind; key "
+                    "this draw with KIND_FAULTS (repro.core.rng), not "
                     f"{terminal_name(kind) or 'a computed kind'}")
+
+
+class REP009(_KindFaultsRule):
+    code = "REP009"
+    summary = "wire/fault RNG draw not keyed by KIND_FAULTS"
+    scope = ("fl/wire.py", "fl/faults.py", "fl/robust.py")
+    what = "wire/fault"
+
+
+class REP010(_KindFaultsRule):
+    code = "REP010"
+    summary = "availability-schedule RNG draw not keyed by KIND_FAULTS"
+    scope = ("fl/availability.py",)
+    what = "availability-schedule"

@@ -49,6 +49,7 @@ from repro.core import caesar as CA
 from repro.core import compression as C
 from repro.core import rng as RNG
 from repro.data import partition, synthetic
+from repro.fl import availability as AV
 from repro.fl import baselines as BL
 from repro.fl import faults as F
 from repro.fl import robust as RB
@@ -154,6 +155,17 @@ class SimConfig:
     # record ||restored − true||/||true|| at every centroid restore
     # (ROADMAP item 1); surfaced via executor.telemetry()["restore_error"]
     measure_eviction_error: bool = False
+    # --- trace-driven availability (DESIGN.md §12) -----------------------
+    # who is samplable each round: "always" is the paper's world (uniform
+    # draw over every client — byte-identical to the legacy driver, which
+    # the bit-identity gate depends on); "diurnal" gates the draw on a
+    # deterministic replayable timezone/session schedule (fl/availability)
+    availability: AV.AvailabilityConfig = dataclasses.field(
+        default_factory=AV.AvailabilityConfig)
+    # krum only: assumed attacker count f (None ⇒ round(trim_frac·cohort))
+    # and multi-Krum selection size m (None ⇒ cohort − f − 2)
+    krum_f: Optional[int] = None
+    krum_m: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -211,6 +223,8 @@ class RoundPkg:
     ys: Optional[np.ndarray] = None
     tiers: Optional[list] = None      # list[TierGroup]
     fplan: Optional[F.FaultPlan] = None   # wire engine: round fault draw
+    n_eligible: int = 0               # availability: online client count
+    n_forced: int = 0                 # cohort shortfall force-woken
 
 
 # ---------------------------------------------------------------------------
@@ -316,7 +330,8 @@ class Simulator:
                 cfg.faults, cfg.seed, cfg.n_clients)
             self._aggregator = RB.make_aggregator(
                 cfg.aggregation, cohort=self.n_part,
-                trim_frac=cfg.trim_frac, clip_norm=cfg.clip_norm)
+                trim_frac=cfg.trim_frac, clip_norm=cfg.clip_norm,
+                krum_f=cfg.krum_f, krum_m=cfg.krum_m)
         # uploads deferred from round t-1 under late_policy="defer":
         # list of (client id, WireUpload)
         self._deferred: list = []
@@ -325,6 +340,23 @@ class Simulator:
         # the raw record fig11 and the resume test consume
         self.fault_log: list = []
         self._t_done = 0
+
+        # --- trace-driven availability (DESIGN.md §12) -------------------
+        self._avail_on = cfg.availability.enabled()
+        if self._avail_on and cfg.sharded:
+            raise ValueError(
+                "diurnal availability is single-mesh (the stratified shard "
+                "draw has no per-shard forced-wake story yet); set "
+                "sharded=False")
+        # static per-client home phases, drawn once — read-only after init,
+        # so the prefetch worker shares them without synchronization
+        self._avail_phases = (AV.client_phases(cfg.availability, cfg.seed,
+                                               cfg.n_clients)
+                              if self._avail_on else None)
+        # one dict per round: eligibility counts + participant staleness —
+        # the raw record fig11 reports against the download policy
+        self.avail_log: list = []
+        self._last_part = np.zeros(cfg.n_clients, np.int64)
 
         def evaluate(flat_params, x, y):
             logits = self.apply_fn(C.unflatten_vector(flat_params, self.spec),
@@ -388,18 +420,37 @@ class Simulator:
         stochastic-rounding stream."""
         return RNG.stream(self.cfg.seed, RNG.KIND_SAMPLING, t)
 
-    def _select_participants(self, rng: np.random.Generator) -> np.ndarray:
-        """Uniform draw; stratified per shard in sharded mode (each device
-        must own its participants' pool rows). With one device the two
-        are the same draw."""
+    def _select_participants(self, rng: np.random.Generator, t: int
+                             ) -> tuple[np.ndarray, int, int]:
+        """Round t's cohort draw → (parts, n_eligible, n_forced).
+
+        Availability off ("always"): the legacy uniform draw — byte-
+        identical stream consumption, which the zero-fault bit-identity
+        gate depends on; stratified per shard in sharded mode (each device
+        must own its participants' pool rows). Diurnal: a uniform draw
+        over the round's eligible set (fl/availability — pure numpy, safe
+        on the prefetch worker); when fewer clients are online than the
+        cohort needs, the server force-wakes the shortfall (the push-
+        notification escape hatch real deployments use), drawn uniformly
+        from the offline remainder — ``n_forced`` is the per-round count
+        the avail_log reports."""
         n, d = self.cfg.n_clients, self.n_dev
-        if d <= 1:
-            return rng.choice(n, self.n_part, replace=False)
-        rows, ps = n // d, self.n_part // d
-        return np.concatenate([
-            rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
-                       replace=False)
-            for s in range(d)])
+        if not self._avail_on:
+            if d <= 1:
+                return rng.choice(n, self.n_part, replace=False), n, 0
+            rows, ps = n // d, self.n_part // d
+            return np.concatenate([
+                rng.choice(np.arange(s * rows, (s + 1) * rows), ps,
+                           replace=False)
+                for s in range(d)]), n, 0
+        mask = AV.eligible_mask(self.cfg.availability, self.cfg.seed, t, n,
+                                self._avail_phases)
+        el = np.flatnonzero(mask)
+        if len(el) >= self.n_part:
+            return rng.choice(el, self.n_part, replace=False), len(el), 0
+        forced = rng.choice(np.flatnonzero(~mask), self.n_part - len(el),
+                            replace=False)
+        return (np.concatenate([el, forced]), len(el), len(forced))
 
     def _draw_indices(self, rng: np.random.Generator,
                       parts: np.ndarray) -> np.ndarray:
@@ -439,7 +490,7 @@ class Simulator:
         engine, policy schemes, and external callers (bench_round's
         LegacyEngine drives it directly)."""
         rng = self._round_rng(t)
-        parts = self._select_participants(rng)
+        parts, _n_el, _n_forced = self._select_participants(rng, t)
         idx = self._draw_indices(rng, parts)
         if out is None:
             out = self._alloc_batch_buffers(len(parts))
@@ -586,7 +637,7 @@ class Simulator:
         advance] → batch gather (tier-shaped when the plan is known,
         cap-shaped otherwise). Never touches the state store."""
         rng = self._round_rng(t)
-        parts = self._select_participants(rng)
+        parts, n_el, n_forced = self._select_participants(rng, t)
         idx = self._draw_indices(rng, parts)
         mu, bw_d, bw_u = self.cap.snapshot(t)
         if self.planner.is_caesar and self.cfg.ragged:
@@ -603,11 +654,12 @@ class Simulator:
                 t, parts if fplan is None else parts[fplan.record])
             tiers = self._tiers_from_idx(idx, plan[2], plan[3], bufs)
             return RoundPkg(parts, mu, bw_d, bw_u, plan=plan, tiers=tiers,
-                            fplan=fplan)
+                            fplan=fplan, n_eligible=n_el, n_forced=n_forced)
         if "cap" not in bufs:
             bufs["cap"] = self._alloc_batch_buffers(self.n_part)
         xs, ys = self._gather_cap(idx, bufs["cap"])
-        return RoundPkg(parts, mu, bw_d, bw_u, xs=xs, ys=ys)
+        return RoundPkg(parts, mu, bw_d, bw_u, xs=xs, ys=ys,
+                        n_eligible=n_el, n_forced=n_forced)
 
     # ------------------------------------------------------------------
     # The wire-boundary round (DESIGN.md §11): deferred tier-chunk step →
@@ -625,12 +677,20 @@ class Simulator:
             global_f, store, parts, tiers, lr, td32, tu32, t=t,
             wmask=fp.adopt)
 
-        # -- client side: serialize each surviving upload onto the wire --
+        # -- client side: serialize each surviving upload onto the wire.
+        # Two passes over the SAME chunk-stream order the old single loop
+        # walked (send order is part of the bit-identity contract): pass 1
+        # collects each survivor's sparse honest upload, pass 2 swaps in
+        # the adversarial payload and transmits. The split exists for the
+        # colluding ALIE attack, whose shared vector needs the round's
+        # honest statistics before any attacker can transmit (the standard
+        # ALIE omniscience assumption).
         tr = self._transport
         wire_bytes = 0
         resent = np.zeros(len(parts), bool)
         sent = []        # pos (parts order) in send order
         retained = {}    # pos -> clean payload, for the retry-once path
+        rows = []        # (pos, idx [k], vals [k]) in chunk-stream order
         for pos_c, slots, c, ups in chunks:
             ups_np = np.asarray(ups)
             for row_i, pos in zip(slots, pos_c):
@@ -639,21 +699,41 @@ class Simulator:
                     continue
                 row = ups_np[row_i]
                 idx = np.flatnonzero(row)
-                vals = row[idx]
+                rows.append((pos, idx, row[idx]))
+        alie = None
+        if cfg.faults.attack == "alie" and bool(fp.byz.any()):
+            hsum = np.zeros(self.n_params, np.float64)
+            hsq = np.zeros(self.n_params, np.float64)
+            hn, hks, hnorms = 0, [], []
+            for pos, idx, vals in rows:
                 if fp.byz[pos]:
-                    vals = F.attack_values(cfg.faults, cfg.seed, t,
-                                           int(parts[pos]), vals)
-                payload = W.encode_upload(
-                    idx, vals, client=int(parts[pos]), round_=t,
-                    n_params=self.n_params,
-                    value_dtype=cfg.wire_value_dtype)
-                retained[pos] = payload
-                wire_bytes += len(payload)
-                if fp.corrupt_first[pos]:
-                    payload = F.flip_bit(payload, cfg.seed, t,
-                                         int(parts[pos]), salt=0)
-                tr.send(payload)
-                sent.append(pos)
+                    continue
+                v64 = vals.astype(np.float64)
+                hsum[idx] += v64
+                hsq[idx] += v64 * v64
+                hn += 1
+                hks.append(len(idx))
+                hnorms.append(float(np.linalg.norm(v64)))
+            if hn:
+                alie = F.alie_payload(cfg.faults, hsum, hsq, hn,
+                                      int(np.median(hks)),
+                                      float(np.median(hnorms)))
+        for pos, idx, vals in rows:
+            if fp.byz[pos]:
+                idx, vals = F.attack_payload(
+                    cfg.faults, cfg.seed, t, int(parts[pos]), idx, vals,
+                    self.n_params, alie=alie)
+            payload = W.encode_upload(
+                idx, vals, client=int(parts[pos]), round_=t,
+                n_params=self.n_params,
+                value_dtype=cfg.wire_value_dtype)
+            retained[pos] = payload
+            wire_bytes += len(payload)
+            if fp.corrupt_first[pos]:
+                payload = F.flip_bit(payload, cfg.seed, t,
+                                     int(parts[pos]), salt=0)
+            tr.send(payload)
+            sent.append(pos)
         payloads = (tr.drain(len(sent)) if cfg.wire == "queue"
                     else tr.drain())
 
@@ -780,6 +860,8 @@ class Simulator:
             wire_bits_cum = 0.0
             self._deferred = []
             self.fault_log = []
+            self.avail_log = []
+            self._last_part = np.zeros(cfg.n_clients, np.int64)
         self._transport = (W.make_transport(cfg.wire) if self._wire_on
                            else None)
         # double-buffered producer: one worker prefetches round t+1's
@@ -807,6 +889,19 @@ class Simulator:
                     pkg = prefetch(t)
                 parts = pkg.parts
                 mu, bw_d, bw_u = pkg.mu, pkg.bw_d, pkg.bw_u
+                # participant staleness at draw time (δ = t − last recorded
+                # participation; δ = t for first-timers) — the distribution
+                # the download policy keys compression off, logged per
+                # round alongside the availability counts. MAIN thread
+                # only: `_last_part` must advance in round order.
+                stale = t - self._last_part[parts]
+                self.avail_log.append({
+                    "round": t, "n_eligible": int(pkg.n_eligible),
+                    "n_forced": int(pkg.n_forced),
+                    "staleness": AV.staleness_stats(stale)})
+                rec = (parts if pkg.fplan is None
+                       else parts[pkg.fplan.record])
+                self._last_part[rec] = t
                 lr = jnp.float32(SGD.lr_at(cfg.sgd, jnp.float32(t - 1)))
 
                 if pkg.plan is not None:
@@ -940,6 +1035,8 @@ class Simulator:
             "deferred": [(int(cl), int(u.round), u.indices.copy(),
                           u.values.copy()) for cl, u in self._deferred],
             "fault_log": [dict(e) for e in self.fault_log],
+            "last_part": self._last_part.copy(),
+            "avail_log": [dict(e) for e in self.avail_log],
         }
 
     def load_state_dict(self, d: dict) -> None:
@@ -960,6 +1057,10 @@ class Simulator:
                               values=np.asarray(v, np.float32)))
             for cl, r, ix, v in d["deferred"]]
         self.fault_log = [dict(e) for e in d["fault_log"]]
+        self._last_part = np.asarray(
+            d.get("last_part", np.zeros(self.cfg.n_clients, np.int64))
+        ).copy()
+        self.avail_log = [dict(e) for e in d.get("avail_log", [])]
         self._t_done = int(d["t_done"])
         self._resume = {"t_done": int(d["t_done"]),
                         "global_flat": np.asarray(d["global_flat"]).copy(),

@@ -23,10 +23,29 @@ materializing a dense ``[P, n_params]`` matrix:
   MEDIAN accepted-upload norm (a robust location estimate the attackers
   cannot inflate below 50% corruption). Norms come free from the decoded
   sparse values, so this is the mean fold with host-computed row weights.
+* ``median`` — EXACT coordinate-wise median (DESIGN.md §12): the update
+  pass re-sparsifies each accepted chunk row (O(cohort · k) state — the
+  decoded stream, never ``[P, n_params]``), and finalize replays those
+  rows column-tile by column-tile (``[rows, tile]`` dense blocks) taking
+  ``np.median`` per tile. Zero-inclusive: a top-k upload IS exactly zero
+  off-support, so a coordinate most honest rows never voted on has
+  median 0 — which is what defeats support poisoning, and also why the
+  median trains slowly on very sparse uploads (most coordinates see a
+  majority of zeros; documented trade-off, see DESIGN.md §12).
+* ``krum`` — multi-Krum (Blanchard et al., NeurIPS'17) over the same
+  re-sparsified rows: pairwise ‖uᵢ−uⱼ‖² from the Gram matrix accumulated
+  column-tile by column-tile (sparse rows → ``[rows, tile]`` blocks →
+  ``B·Bᵀ``; never ``[P, n_params]``), score = sum of the n−f−2 smallest
+  neighbor distances, aggregate = mean of the m best-scoring uploads.
 
-Each aggregator owns small jitted kernels (one trace per chunk shape —
-the same rung ladder that bounds the executor's cache bounds these), all
-f32, with the carry donated through the fold.
+Every aggregator is chunking-invariant — splitting the same row stream
+into different chunk sizes yields the same result (bit-exact for
+median/krum, whose finalize never sees chunk boundaries; CI-gated in
+fig11 --smoke). mean/trimmed_mean/norm_clip own small jitted kernels
+(one trace per chunk shape — the same rung ladder that bounds the
+executor's cache bounds these), all f32, with the carry donated through
+the fold; median/krum are host-side numpy (their finalize is a one-shot
+robust statistic, not a device fold).
 """
 from __future__ import annotations
 
@@ -36,7 +55,7 @@ import numpy as np
 
 from repro.fl import wire as W
 
-AGGREGATIONS = ("mean", "trimmed_mean", "norm_clip")
+AGGREGATIONS = ("mean", "trimmed_mean", "norm_clip", "median", "krum")
 
 
 def weighted_row_fold(acc, ups, w):
@@ -150,8 +169,122 @@ class NormClipAggregator(MeanAggregator):
             .astype(np.float32)
 
 
+class SparseRowAggregator:
+    """Shared base for the order-statistic aggregators (median, Krum):
+    ``update`` re-sparsifies each valid chunk row back to (indices,
+    values) — exactly the decoded upload, O(k) per row — so the carry is
+    the round's sparse row list, never a dense ``[P, n_params]`` matrix.
+    ``_tiles`` densifies ``[n_rows, tile]`` column blocks on demand for
+    finalize. Rows are appended in chunk-stream order, which is the SAME
+    total order whatever the chunk sizes — chunking invariance is
+    bit-exact by construction (finalize never sees chunk boundaries)."""
+
+    needs_norms = False
+
+    def __init__(self, tile: int = 4096):
+        if tile < 1:
+            raise ValueError(f"tile={tile} < 1")
+        self.tile = int(tile)
+
+    def init(self, n_params: int):
+        return {"n": int(n_params), "rows": []}
+
+    def update(self, carry, ups: np.ndarray, w: np.ndarray):
+        ups = np.asarray(ups, np.float32)
+        w = np.asarray(w)
+        for i in np.flatnonzero(w > 0):
+            row = ups[i]
+            idx = np.flatnonzero(row).astype(np.int64)
+            carry["rows"].append((idx, row[idx].astype(np.float32)))
+        return carry
+
+    def add_sparse(self, carry, indices: np.ndarray, values: np.ndarray):
+        """Append one already-sparse upload (the decode_and_aggregate hot
+        loop's path — skips the densify→re-sparsify round trip)."""
+        order = np.argsort(indices, kind="stable")
+        carry["rows"].append((np.asarray(indices, np.int64)[order],
+                              np.asarray(values, np.float32)[order]))
+        return carry
+
+    def _tiles(self, carry):
+        """Yield (j0, j1, block [n_rows, j1-j0] f32) column tiles. Row
+        indices are ascending (np.flatnonzero / sorted add_sparse), so
+        each row's tile slice is a binary search, not a scan."""
+        rows, n = carry["rows"], carry["n"]
+        for j0 in range(0, n, self.tile):
+            j1 = min(j0 + self.tile, n)
+            block = np.zeros((len(rows), j1 - j0), np.float32)
+            for r, (idx, vals) in enumerate(rows):
+                lo, hi = np.searchsorted(idx, (j0, j1))
+                block[r, idx[lo:hi] - j0] = vals[lo:hi]
+            yield j0, j1, block
+
+
+class MedianAggregator(SparseRowAggregator):
+    """Exact coordinate-wise median over the round's accepted uploads,
+    computed per column tile at finalize. Robust to any < 50% corrupted
+    minority per coordinate — including support poisoning, where the
+    honest majority's exact zeros outvote the attackers' junk mass."""
+
+    def finalize(self, global_f, carry, cnt: int):
+        n = carry["n"]
+        med = np.zeros(n, np.float32)
+        if carry["rows"]:
+            for j0, j1, block in self._tiles(carry):
+                med[j0:j1] = np.median(block, axis=0).astype(np.float32)
+        return global_f - jnp.asarray(med)
+
+
+class KrumAggregator(SparseRowAggregator):
+    """Multi-Krum over the round's accepted uploads. Pairwise distances
+    come from the Gram matrix: ‖uᵢ−uⱼ‖² = ‖uᵢ‖² + ‖uⱼ‖² − 2⟨uᵢ,uⱼ⟩, with
+    ⟨·,·⟩ accumulated as ``B·Bᵀ`` over the same column tiles the median
+    replays — sparse payloads in, O(P²) score state, never a dense
+    ``[P, n_params]``. Each upload is scored by the sum of its n−f−2
+    smallest squared distances to the others; the aggregate is the mean
+    of the ``m`` best-scoring uploads (m=1 recovers classic Krum; the
+    default m = n−f−2 averages every plausibly-honest row, tracking the
+    fault-free mean closely while still excluding the far outliers)."""
+
+    def __init__(self, f: int, m: int | None = None, tile: int = 4096):
+        super().__init__(tile=tile)
+        if f < 0:
+            raise ValueError(f"krum f={f} must be >= 0")
+        if m is not None and m < 1:
+            raise ValueError(f"krum m={m} must be >= 1")
+        self.f = int(f)
+        self.m = None if m is None else int(m)
+
+    def finalize(self, global_f, carry, cnt: int):
+        rows, n = carry["rows"], carry["n"]
+        r = len(rows)
+        out = np.zeros(n, np.float32)
+        if r == 0:
+            return global_f - jnp.asarray(out)
+        gram = np.zeros((r, r), np.float64)
+        for _j0, _j1, block in self._tiles(carry):
+            gram += block @ block.T
+        sq = np.diag(gram).copy()
+        d2 = np.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+        np.fill_diagonal(d2, np.inf)            # self-distance never counts
+        n_neigh = max(1, r - self.f - 2)
+        neigh = np.sort(d2, axis=1)[:, :min(n_neigh, r - 1)] if r > 1 \
+            else np.zeros((1, 1))
+        scores = neigh.sum(axis=1)
+        m = self.m if self.m is not None else max(1, r - self.f - 2)
+        m = min(m, r)
+        sel = set(np.argsort(scores, kind="stable")[:m].tolist())
+        # mean of the selected rows, tile by tile (selection mask keeps
+        # the fixed row order, so the sum association is chunking-free)
+        mask = np.array([i in sel for i in range(r)], bool)
+        for j0, j1, block in self._tiles(carry):
+            out[j0:j1] = (block[mask].sum(axis=0) / np.float32(m))
+        return global_f - jnp.asarray(out)
+
+
 def make_aggregator(name: str, *, cohort: int, trim_frac: float = 0.1,
-                    clip_norm: float | None = None):
+                    clip_norm: float | None = None,
+                    krum_f: int | None = None, krum_m: int | None = None):
     if name == "mean":
         return MeanAggregator()
     if name == "trimmed_mean":
@@ -163,6 +296,19 @@ def make_aggregator(name: str, *, cohort: int, trim_frac: float = 0.1,
         return TrimmedMeanAggregator(trim_k)
     if name == "norm_clip":
         return NormClipAggregator(clip_norm)
+    if name == "median":
+        return MedianAggregator()
+    if name == "krum":
+        if cohort < 3:
+            raise ValueError(f"krum needs a cohort of >= 3 "
+                             f"(got {cohort}) to score neighbors")
+        f = (max(1, int(round(trim_frac * cohort)))
+             if krum_f is None else int(krum_f))
+        if f > cohort - 3:
+            raise ValueError(
+                f"krum f={f} leaves no neighbors in a {cohort}-participant "
+                "cohort (need f <= cohort - 3)")
+        return KrumAggregator(f=f, m=krum_m)
     raise ValueError(f"unknown aggregation {name!r}; "
                      f"want one of {AGGREGATIONS}")
 
@@ -170,39 +316,67 @@ def make_aggregator(name: str, *, cohort: int, trim_frac: float = 0.1,
 def decode_and_aggregate(payloads, n_params: int, agg=None,
                          chunk: int = 64):
     """Server hot loop over a batch of serialized uploads: decode + CRC
-    check each, densify into [chunk, n_params] blocks, fold through the
-    aggregator. Returns (aggregate delta [n_params] np, n_ok, n_bad).
+    check each, fold through the aggregator. Returns (aggregate delta
+    [n_params] np, n_ok, n_bad).
 
     This is the throughput kernel the fig11 load generator hammers — it is
-    exactly what the wire round does per chunk, minus the fault protocol."""
+    exactly what the wire round does per chunk, minus the fault protocol.
+    Three fold shapes, all producing the same semantics as the wire round:
+
+    * sparse aggregators (median/krum) take each decoded upload via
+      ``add_sparse`` — no densify→re-sparsify round trip;
+    * ``needs_norms`` aggregators (norm_clip) must see EVERY accepted
+      upload's norm before any row weight exists (C defaults to the
+      round's median norm), so decoded uploads are buffered sparse —
+      O(n_ok · k), never [P, n_params] — and folded once scales resolve;
+    * everything else streams through [chunk, n_params] dense blocks.
+    """
     agg = agg or MeanAggregator()
     carry = agg.init(n_params)
-    dense = np.zeros((chunk, n_params), np.float32)
-    w = np.zeros(chunk, np.float32)
-    fill = 0
     n_ok = n_bad = 0
 
-    def flush():
-        nonlocal carry, fill
-        carry = agg.update(carry, dense, w)
-        dense[:fill] = 0.0
-        w[:fill] = 0.0
-        fill = 0
+    def decoded():
+        nonlocal n_ok, n_bad
+        for payload in payloads:
+            try:
+                u = W.decode_upload(payload)
+            except W.WireError:
+                n_bad += 1
+                continue
+            n_ok += 1
+            yield u
 
-    for payload in payloads:
-        try:
-            u = W.decode_upload(payload)
-        except W.WireError:
-            n_bad += 1
-            continue
-        dense[fill, u.indices] = u.values
-        w[fill] = 1.0
-        fill += 1
-        n_ok += 1
-        if fill == chunk:
-            flush()
-    if fill:
-        flush()
+    if isinstance(agg, SparseRowAggregator):
+        for u in decoded():
+            carry = agg.add_sparse(carry, u.indices, u.values)
+    else:
+        if agg.needs_norms:
+            pend = [(u.indices, u.values) for u in decoded()]
+            scales = agg.scales(np.array(
+                [np.linalg.norm(np.asarray(v, np.float64))
+                 for _idx, v in pend]))
+            batches = ((pend[s:s + chunk], scales[s:s + chunk])
+                       for s in range(0, len(pend), chunk))
+        else:
+            def _stream():
+                buf = []
+                for u in decoded():
+                    buf.append((u.indices, u.values))
+                    if len(buf) == chunk:
+                        yield buf, np.ones(chunk, np.float32)
+                        buf = []
+                if buf:
+                    yield buf, np.ones(len(buf), np.float32)
+            batches = _stream()
+        dense = np.zeros((chunk, n_params), np.float32)
+        w = np.zeros(chunk, np.float32)
+        for rows, ws in batches:
+            dense[:] = 0.0
+            w[:] = 0.0
+            for r, (idx, vals) in enumerate(rows):
+                dense[r, idx] = vals
+            w[:len(rows)] = ws
+            carry = agg.update(carry, dense, w)
     zero = jnp.zeros(n_params, jnp.float32)
     delta = np.asarray(agg.finalize(zero, carry, max(n_ok, 1)))
     return -delta, n_ok, n_bad

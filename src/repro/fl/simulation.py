@@ -27,7 +27,9 @@ This module is the stable public surface of the **layered round engine**
 * `repro.fl.wire` / `repro.fl.faults` / `repro.fl.robust` — the
   wire-boundary fault engine (DESIGN.md §11): serialized upload codec +
   transports, dropout/straggler/corruption/Byzantine injection, robust
-  server aggregation (mean / trimmed_mean / norm_clip). Enabled with
+  server aggregation (mean / trimmed_mean / norm_clip / median / krum —
+  including the adaptive support-poison and colluding ALIE attacks), and
+  `repro.fl.availability`'s deterministic diurnal schedules. Enabled with
   ``SimConfig(wire="loopback")``; zero faults are bit-identical to the
   in-process path.
 
@@ -37,6 +39,7 @@ invisible to callers of the old 1300-line monolith.
 """
 from __future__ import annotations
 
+from repro.fl.availability import AvailabilityConfig  # noqa: F401
 from repro.fl.driver import (History, RoundPkg, SimConfig,  # noqa: F401
                              Simulator)
 from repro.fl.executor import (BUFFER_DTYPES, EF_EXTRA_ARRAYS,  # noqa: F401
@@ -49,6 +52,7 @@ from repro.fl.wire import WireUpload, decode_upload, encode_upload  # noqa: F401
 
 __all__ = [
     "AGGREGATIONS",
+    "AvailabilityConfig",
     "BUFFER_DTYPES",
     "EF_EXTRA_ARRAYS",
     "ClientStateStore",

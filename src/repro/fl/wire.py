@@ -198,12 +198,26 @@ class LoopbackTransport:
 
 class QueueTransport:
     """Multi-process wire: producers (other processes) ``send`` serialized
-    uploads into a ``multiprocessing`` queue; the server drains an expected
-    count on the main thread. Used by the fig11 load generator."""
+    uploads into a ``multiprocessing`` queue; the server drains on the main
+    thread. Used by the fig11 load generator and the backpressured soak.
+
+    A bounded queue (``maxsize > 0``) models a server ingress buffer:
+    ``try_send`` is the producer's non-blocking offer (False = buffer full
+    — the producer's problem, see ``send_with_backoff``), ``get`` pulls
+    one payload server-side, ``depth`` samples the instantaneous queue
+    occupancy for backpressure telemetry."""
 
     def __init__(self, ctx=None, maxsize: int = 0):
         import multiprocessing as mp
         self._q = (ctx or mp.get_context("spawn")).Queue(maxsize)
+
+    @classmethod
+    def attach(cls, queue) -> "QueueTransport":
+        """Wrap an existing mp queue handle (the picklable ``queue``
+        property shipped to a producer process) back into a transport."""
+        self = cls.__new__(cls)
+        self._q = queue
+        return self
 
     @property
     def queue(self):
@@ -213,12 +227,56 @@ class QueueTransport:
     def send(self, payload: bytes) -> None:
         self._q.put(payload)
 
+    def try_send(self, payload: bytes) -> bool:
+        """Non-blocking offer; False when the bounded buffer is full."""
+        import queue as _queue
+        try:
+            self._q.put_nowait(payload)
+            return True
+        except _queue.Full:
+            return False
+
+    def get(self, timeout: float = 60.0) -> bytes:
+        """Pull one payload (server side). Raises ``queue.Empty`` on
+        timeout — the soak's drain loop treats that as 'producers done'."""
+        return self._q.get(timeout=timeout)
+
+    def depth(self) -> int:
+        """Approximate current queue occupancy (mp.Queue.qsize is advisory
+        by contract; good enough for telemetry, never for control flow)."""
+        try:
+            return self._q.qsize()
+        except NotImplementedError:      # macOS sem_getvalue gap
+            return -1
+
     def drain(self, n: int, timeout: float = 60.0) -> list[bytes]:
         return [self._q.get(timeout=timeout) for _ in range(n)]
 
     def close(self) -> None:
         self._q.close()
         self._q.join_thread()
+
+
+def send_with_backoff(transport, payload: bytes, *, max_retries: int = 8,
+                      base_s: float = 0.002, cap_s: float = 0.25):
+    """Producer-side retry/backoff against a bounded queue: offer via
+    ``try_send``; on Full, sleep ``min(cap_s, base_s · 2^attempt)`` and
+    retry, up to ``max_retries`` times. Deterministic (no jitter — the
+    soak wants reproducible-ish schedules and the producers are already
+    decorrelated by their payload build times). Returns
+    ``(delivered, retries, waited_s)`` so the soak can report reject and
+    backoff telemetry per producer."""
+    import time
+    if transport.try_send(payload):
+        return True, 0, 0.0
+    waited = 0.0
+    for attempt in range(max_retries):
+        pause = min(cap_s, base_s * (2.0 ** attempt))
+        time.sleep(pause)
+        waited += pause
+        if transport.try_send(payload):
+            return True, attempt + 1, waited
+    return False, max_retries, waited
 
 
 def make_transport(name: str):

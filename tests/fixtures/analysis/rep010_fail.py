@@ -1,0 +1,13 @@
+"""Must-fail fixture for REP010: availability draws off foreign kinds."""
+from repro.core import rng as RNG
+
+STEP_AVAIL = 1 << 20
+
+
+def eligible_mask(cfg, seed, t, n_clients):
+    # wrong kind: the schedule would not replay under the fault-resume key
+    rng = RNG.stream(seed, RNG.KIND_SAMPLING, STEP_AVAIL)
+    phases = rng.random(n_clients)
+    # no kind at all: the root-stream bug in the schedule
+    flake = RNG.stream(seed).random(n_clients)
+    return (phases + flake) % 1.0 < cfg.duty

@@ -1,0 +1,12 @@
+"""Must-pass twin for REP010: every schedule draw keyed by KIND_FAULTS."""
+from repro.core import rng as RNG
+
+STEP_AVAIL = 1 << 20
+STEP_DAY = STEP_AVAIL + 1
+
+
+def eligible_mask(cfg, seed, t, n_clients):
+    rng = RNG.stream(seed, RNG.KIND_FAULTS, STEP_AVAIL)
+    phases = rng.random(n_clients)
+    day = RNG.stream(seed, RNG.KIND_FAULTS, STEP_DAY, t).random(n_clients)
+    return (phases + day) % 1.0 < cfg.duty

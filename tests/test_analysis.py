@@ -24,10 +24,12 @@ from repro.core import rng as RNG
 FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
-# REP005 is scoped to device-math modules and REP009 to the wire/fault
-# modules; their fixtures are linted under synthetic in-scope paths
+# REP005 is scoped to device-math modules, REP009 to the wire/fault
+# modules and REP010 to the availability schedule; their fixtures are
+# linted under synthetic in-scope paths
 _LINT_PATH = {"REP005": "src/repro/core/{name}",
-              "REP009": "src/repro/fl/faults.py"}
+              "REP009": "src/repro/fl/faults.py",
+              "REP010": "src/repro/fl/availability.py"}
 
 
 def _lint_fixture(code: str, which: str):

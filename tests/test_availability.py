@@ -1,0 +1,187 @@
+"""Trace-driven availability schedule (DESIGN.md §12, fl/availability).
+
+Pins the properties the driver and fig11 depend on: the schedule is a
+pure replayable function of (cfg, seed, t) under KIND_FAULTS (REP010's
+structural twin of the fault plan's guarantee), duty/flake move
+eligibility the right way, the driver's cohort draw is eligibility-aware
+with forced wake on shortfall, and — the bit-identity invariant — the
+legacy uniform draw is byte-identical when availability is off.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp  # noqa: F401  (parity with sibling test modules)
+
+from repro.core import rng as RNG
+from repro.core.caesar import CaesarConfig
+from repro.fl import availability as AV
+from repro.fl.simulation import AvailabilityConfig, SimConfig, Simulator
+
+
+def _cfg(**kw):
+    base = dict(dataset="oppo_ts", rounds=4, n_clients=24, data_scale=0.01,
+                eval_every=2, participation=0.25, seed=0,
+                dataset_kwargs={"n_features": 64},
+                caesar=CaesarConfig(tau=2, b_max=8,
+                                    use_error_feedback=True))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+DIURNAL = dict(kind="diurnal", day_rounds=6, duty=0.5, flake_rate=0.05)
+
+
+class TestScheduleMath:
+    def test_config_validates(self):
+        with pytest.raises(ValueError):
+            AvailabilityConfig(kind="weekly")
+        with pytest.raises(ValueError):
+            AvailabilityConfig(day_rounds=0)
+        with pytest.raises(ValueError):
+            AvailabilityConfig(duty=0.0)
+        with pytest.raises(ValueError):
+            AvailabilityConfig(duty=1.5)
+        with pytest.raises(ValueError):
+            AvailabilityConfig(n_zones=0)
+        with pytest.raises(ValueError):
+            AvailabilityConfig(flake_rate=1.0)
+        assert not AvailabilityConfig().enabled()
+        assert AvailabilityConfig(kind="diurnal").enabled()
+
+    def test_always_mode_everyone_eligible(self):
+        cfg = AvailabilityConfig()
+        mask = AV.eligible_mask(cfg, seed=0, t=3, n_clients=17)
+        assert mask.all() and mask.shape == (17,)
+
+    def test_schedule_is_pure_and_replayable(self):
+        """Any round's mask recomputes in isolation — the property that
+        makes checkpoint resume exact without storing schedule state."""
+        cfg = AvailabilityConfig(**DIURNAL)
+        ph = AV.client_phases(cfg, seed=3, n_clients=40)
+        np.testing.assert_array_equal(
+            ph, AV.client_phases(cfg, seed=3, n_clients=40))
+        fwd = [AV.eligible_mask(cfg, 3, t, 40, ph) for t in range(12)]
+        # recompute out of order, without the phase cache
+        for t in (7, 0, 11, 4):
+            np.testing.assert_array_equal(
+                AV.eligible_mask(cfg, 3, t, 40), fwd[t])
+        # masks actually churn across the day
+        assert len({m.tobytes() for m in fwd}) > 1
+
+    def test_duty_orders_eligibility(self):
+        n, rounds = 200, 24
+        frac = {}
+        for duty in (0.2, 0.8):
+            cfg = AvailabilityConfig(kind="diurnal", day_rounds=rounds,
+                                     duty=duty, flake_rate=0.0)
+            frac[duty] = np.mean([
+                AV.eligible_mask(cfg, 0, t, n).mean()
+                for t in range(rounds)])
+        assert frac[0.2] < frac[0.8]
+        assert abs(frac[0.8] - 0.8) < 0.15     # mean-one session factor
+
+    def test_flake_only_removes(self):
+        base = AvailabilityConfig(kind="diurnal", day_rounds=6, duty=0.5,
+                                  flake_rate=0.0)
+        flaky = AvailabilityConfig(kind="diurnal", day_rounds=6, duty=0.5,
+                                   flake_rate=0.4)
+        removed = 0
+        for t in range(12):
+            m0 = AV.eligible_mask(base, 0, t, 100)
+            m1 = AV.eligible_mask(flaky, 0, t, 100)
+            assert not (m1 & ~m0).any()        # flake never adds clients
+            removed += int((m0 & ~m1).sum())
+        assert removed > 0
+
+    def test_phases_are_zone_correlated(self):
+        cfg = AvailabilityConfig(kind="diurnal", n_zones=4,
+                                 zone_spread=0.01)
+        ph = AV.client_phases(cfg, seed=0, n_clients=400)
+        # with tiny spread, phases cluster at the 4 zone anchors
+        anchors = np.arange(4) / 4
+        d = np.abs(ph[:, None] - anchors[None, :]) % 1.0
+        d = np.min(np.minimum(d, 1.0 - d), axis=1)   # circular distance
+        assert np.percentile(d, 90) < 0.05
+
+    def test_staleness_stats(self):
+        assert AV.staleness_stats(np.array([])) == {"n": 0}
+        s = AV.staleness_stats(np.array([1, 1, 1, 9]))
+        assert s["n"] == 4 and s["max"] == 9.0
+        assert s["mean"] == pytest.approx(3.0)
+        assert s["p50"] == pytest.approx(1.0)
+
+
+class TestDriverIntegration:
+    def test_legacy_draw_byte_identical_when_disabled(self):
+        """The bit-identity CI gate rides on this: availability off must
+        consume the sampling stream exactly like the pre-availability
+        driver (a bare rng.choice over all clients)."""
+        sim = Simulator(_cfg())
+        t = 2
+        rng = sim._round_rng(t)
+        parts, n_el, n_forced = sim._select_participants(rng, t)
+        ref = sim._round_rng(t).choice(sim.cfg.n_clients, sim.n_part,
+                                       replace=False)
+        np.testing.assert_array_equal(parts, ref)
+        assert (n_el, n_forced) == (sim.cfg.n_clients, 0)
+
+    def test_sampling_is_eligibility_aware(self):
+        av = AvailabilityConfig(**DIURNAL)
+        sim = Simulator(_cfg(availability=av))
+        for t in range(1, 9):
+            mask = AV.eligible_mask(av, sim.cfg.seed, t,
+                                    sim.cfg.n_clients, sim._avail_phases)
+            parts, n_el, n_forced = sim._select_participants(
+                sim._round_rng(t), t)
+            assert len(parts) == sim.n_part
+            assert len(np.unique(parts)) == len(parts)
+            assert n_el == int(mask.sum())
+            if n_forced == 0:
+                assert mask[parts].all()
+            else:
+                # forced wake fills the shortfall from the offline pool
+                assert n_el < sim.n_part
+                assert mask[parts].sum() == n_el
+                assert (~mask[parts]).sum() == n_forced
+
+    def test_forced_wake_with_tiny_duty(self):
+        av = AvailabilityConfig(kind="diurnal", day_rounds=6, duty=0.05,
+                                session_jitter=0.0, flake_rate=0.0)
+        sim = Simulator(_cfg(availability=av, participation=0.5))
+        forced_any = False
+        for t in range(1, 13):
+            parts, n_el, n_forced = sim._select_participants(
+                sim._round_rng(t), t)
+            assert len(parts) == sim.n_part
+            assert n_el + n_forced >= sim.n_part or n_forced > 0
+            forced_any |= n_forced > 0
+        assert forced_any
+
+    def test_diurnal_rejects_sharded(self):
+        with pytest.raises(ValueError):
+            Simulator(_cfg(availability=AvailabilityConfig(**DIURNAL),
+                           sharded=True))
+
+    def test_run_logs_staleness_and_counts(self):
+        av = AvailabilityConfig(**DIURNAL)
+        sim = Simulator(_cfg(availability=av, rounds=6))
+        h = sim.run()
+        assert np.isfinite(h.accuracy[-1])
+        assert len(sim.avail_log) == 6
+        for t, e in enumerate(sim.avail_log, start=1):
+            assert e["round"] == t
+            assert 0 <= e["n_forced"] <= sim.n_part
+            assert e["staleness"]["n"] == sim.n_part
+            assert e["staleness"]["max"] >= 1.0
+        # first round: everyone is a first-timer, δ = t = 1
+        assert sim.avail_log[0]["staleness"]["mean"] == pytest.approx(1.0)
+
+    def test_run_replays_identically(self):
+        av = AvailabilityConfig(**DIURNAL)
+        a = Simulator(_cfg(availability=av, rounds=4))
+        b = Simulator(_cfg(availability=av, rounds=4))
+        a.run()
+        b.run()
+        np.testing.assert_array_equal(np.asarray(a.global_flat),
+                                      np.asarray(b.global_flat))
+        assert a.avail_log == b.avail_log

@@ -22,7 +22,7 @@ from repro.core import rng as RNG
 from repro.core.caesar import CaesarConfig
 from repro.fl import faults as F
 from repro.fl import robust as RB
-from repro.fl.simulation import SimConfig, Simulator
+from repro.fl.simulation import AvailabilityConfig, SimConfig, Simulator
 
 
 def _cfg(**kw):
@@ -101,6 +101,46 @@ class TestFaultPlanning:
         cfg = F.FaultConfig(straggler_deadline=1.5)
         with pytest.raises(ValueError):
             F.plan_faults(cfg, 0, 1, np.arange(4), None, np.zeros(8, bool))
+
+    def test_late_discard_never_corrupts(self):
+        """A LATE upload under late_policy='discard' is past the deadline —
+        the server would never request a retry for it, so it must not be
+        drawn into the corruption/retry protocol (satellite fix)."""
+        cfg = F.FaultConfig(straggler_deadline=1.0, corrupt_rate=1.0,
+                            late_policy="discard")
+        times = np.array([1.0, 1.0, 1.0, 5.0, 6.0])
+        fp = F.plan_faults(cfg, 0, 2, np.arange(5), times,
+                           np.zeros(8, bool))
+        late = fp.status == F.LATE
+        assert late.sum() == 2
+        assert not fp.corrupt_first[late].any()
+        assert fp.corrupt_first[~late].all()      # corrupt_rate=1.0
+
+    def test_late_defer_still_corrupts(self):
+        cfg = F.FaultConfig(straggler_deadline=1.0, corrupt_rate=1.0,
+                            late_policy="defer")
+        times = np.array([1.0, 1.0, 1.0, 5.0, 6.0])
+        fp = F.plan_faults(cfg, 0, 2, np.arange(5), times,
+                           np.zeros(8, bool))
+        assert fp.corrupt_first.all()
+
+    def test_draw_order_contract_masks_not_skips(self):
+        """Changing the late policy changes WHICH outcomes apply, never
+        which uniforms are drawn: the on-time participants' corruption
+        outcomes must be identical under discard and defer."""
+        times = np.array([1.0, 1.0, 9.0, 1.0, 9.0, 1.0])
+        plans = {}
+        for pol in ("discard", "defer"):
+            cfg = F.FaultConfig(straggler_deadline=1.5, corrupt_rate=0.5,
+                                late_policy=pol)
+            plans[pol] = F.plan_faults(cfg, 3, 7, np.arange(6), times,
+                                       np.zeros(8, bool))
+        on_time = plans["discard"].status != F.LATE
+        np.testing.assert_array_equal(
+            plans["discard"].corrupt_first[on_time],
+            plans["defer"].corrupt_first[on_time])
+        np.testing.assert_array_equal(plans["discard"].status,
+                                      plans["defer"].status)
 
 
 class TestAggregators:
@@ -192,6 +232,106 @@ class TestAggregators:
         np.testing.assert_allclose(delta, np.mean(dense, axis=0),
                                    rtol=1e-5, atol=1e-7)
 
+    def _sparse_payloads(self, n_up, n_params, k, step=6):
+        from repro.fl import wire as W
+        rng = RNG.stream(0, RNG.KIND_FAULTS, step)
+        dense, payloads = [], []
+        for i in range(n_up):
+            idx = rng.choice(n_params, size=k, replace=False)
+            vals = rng.normal(0, 1 + i * 0.3, k).astype(np.float32)
+            payloads.append(W.encode_upload(
+                idx, vals, client=i, round_=0, n_params=n_params))
+            row = np.zeros(n_params, np.float32)
+            row[idx] = vals
+            dense.append(row)
+        return payloads, np.stack(dense)
+
+    def test_decode_and_aggregate_honors_needs_norms(self):
+        """Satellite fix: the hot loop used to hardwire mean semantics —
+        norm_clip row weights must come from the decoded sparse norms
+        (median-of-round C), exactly like the wire round."""
+        n_params, n_up = 60, 6
+        payloads, dense = self._sparse_payloads(n_up, n_params, 9)
+        agg = RB.NormClipAggregator(clip_norm=None)
+        delta, n_ok, n_bad = RB.decode_and_aggregate(payloads, n_params,
+                                                     agg, chunk=4)
+        assert (n_ok, n_bad) == (n_up, 0)
+        norms = np.linalg.norm(dense.astype(np.float64), axis=1)
+        sc = agg.scales(norms)
+        ref = (dense * sc[:, None]).sum(0) / n_up
+        np.testing.assert_allclose(delta, ref, rtol=1e-5, atol=1e-6)
+
+    def test_median_matches_numpy(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 7)
+        ups = rng.normal(0, 1, (9, 33)).astype(np.float32)
+        w = np.ones(9, np.float32)
+        w[6] = 0.0                      # masked rows never vote
+        agg = RB.MedianAggregator(tile=8)
+        carry = agg.init(33)
+        for u_c, w_c in self._chunks(ups, w, [4, 3, 2]):
+            carry = agg.update(carry, u_c, w_c)
+        out = np.asarray(agg.finalize(jnp.zeros(33, jnp.float32), carry, 8))
+        ref = -np.median(ups[w > 0], axis=0)
+        np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+
+    def test_median_is_zero_inclusive_off_support(self):
+        """A top-k upload IS exactly zero off-support: a coordinate only a
+        minority voted on has median 0 — the property that defeats
+        support poisoning."""
+        ups = np.zeros((5, 10), np.float32)
+        ups[0, 3] = 7.0
+        ups[1, 3] = 9.0                 # 2-of-5 minority at coordinate 3
+        ups[:, 5] = 1.0                 # unanimous at coordinate 5
+        agg = RB.MedianAggregator(tile=4)
+        carry = agg.update(agg.init(10), ups, np.ones(5, np.float32))
+        out = np.asarray(agg.finalize(jnp.zeros(10, jnp.float32), carry, 5))
+        assert out[3] == 0.0
+        assert out[5] == -1.0
+
+    def test_krum_excludes_outliers(self):
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 8)
+        base = rng.normal(0, 1, 50).astype(np.float32)
+        honest = base + rng.normal(0, 0.01, (8, 50)).astype(np.float32)
+        evil = rng.normal(0, 100.0, (2, 50)).astype(np.float32)
+        ups = np.concatenate([honest, evil]).astype(np.float32)
+        agg = RB.KrumAggregator(f=2, tile=16)
+        carry = agg.update(agg.init(50), ups, np.ones(10, np.float32))
+        out = -np.asarray(agg.finalize(jnp.zeros(50, jnp.float32),
+                                       carry, 10))
+        h_mean = honest.mean(axis=0)
+        err_krum = np.linalg.norm(out - h_mean)
+        err_mean = np.linalg.norm(ups.mean(axis=0) - h_mean)
+        assert err_krum < 0.05 * err_mean, (err_krum, err_mean)
+
+    def test_median_krum_chunking_bit_exact(self):
+        """The order-statistic aggregators replay the SAME sparse row list
+        whatever the chunk sizes — finalize never sees chunk boundaries,
+        so invariance is bit-exact, not approximate."""
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 9)
+        ups = rng.normal(0, 1, (9, 37)).astype(np.float32)
+        w = np.ones(9, np.float32)
+        for make in (lambda: RB.MedianAggregator(tile=16),
+                     lambda: RB.KrumAggregator(f=1, tile=16)):
+            outs = []
+            for sizes in ([9], [3, 3, 3], [1] * 9, [4, 5]):
+                agg = make()
+                carry = agg.init(37)
+                for u_c, w_c in self._chunks(ups, w, sizes):
+                    carry = agg.update(carry, u_c, w_c)
+                outs.append(np.asarray(
+                    agg.finalize(jnp.zeros(37, jnp.float32), carry, 9)))
+            for o in outs[1:]:
+                np.testing.assert_array_equal(o, outs[0])
+
+    def test_make_aggregator_krum_validates(self):
+        with pytest.raises(ValueError):
+            RB.make_aggregator("krum", cohort=2)       # no neighbors
+        with pytest.raises(ValueError):
+            RB.make_aggregator("krum", cohort=6, krum_f=5)
+        agg = RB.make_aggregator("krum", cohort=10, krum_f=2, krum_m=1)
+        assert isinstance(agg, RB.KrumAggregator)
+        assert (agg.f, agg.m) == (2, 1)
+
 
 class TestWireRoundSemantics:
     def test_zero_faults_bit_identical_to_inproc(self):
@@ -276,6 +416,158 @@ class TestSignFlipNeutralization:
         for robust in ("trimmed_mean", "norm_clip"):
             dev = np.linalg.norm(final_global(robust, 0.1) - g_clean) / ref
             assert dev < 0.5 * dev_mean, (robust, dev, dev_mean)
+
+
+class TestAdaptiveAttacks:
+    def test_support_poison_is_off_support_and_deterministic(self):
+        cfg = F.FaultConfig(byzantine_frac=0.1, attack="support_poison",
+                            attack_scale=3.0)
+        idx = np.array([2, 7, 11, 40, 99], np.int32)
+        vals = np.array([0.5, -2.0, 1.0, -0.25, 4.0], np.float32)
+        i1, v1 = F.attack_payload(cfg, 0, 5, 9, idx, vals, 512)
+        i2, v2 = F.attack_payload(cfg, 0, 5, 9, idx, vals, 512)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(v1, v2)
+        assert not np.isin(i1, idx).any()          # strictly off-support
+        assert 0 < len(i1) <= len(idx)
+        # magnitudes are the honest |values| sorted descending, ×scale
+        mags = np.sort(np.abs(vals))[::-1][:len(i1)]
+        np.testing.assert_allclose(np.abs(v1), 3.0 * mags, rtol=1e-6)
+        # a different client gets a different poison support
+        i3, _ = F.attack_payload(cfg, 0, 5, 10, idx, vals, 512)
+        assert not np.array_equal(i1, i3)
+
+    def test_support_poison_degenerate_falls_back(self):
+        cfg = F.FaultConfig(byzantine_frac=0.1, attack="support_poison")
+        idx = np.arange(8, dtype=np.int32)
+        vals = np.ones(8, np.float32)
+        # support covers the whole space: nowhere off-support to go
+        i, v = F.attack_payload(cfg, 0, 1, 2, idx, vals, 8)
+        np.testing.assert_array_equal(i, idx)
+        assert v.shape == vals.shape
+        # empty honest payload passes through
+        i0, v0 = F.attack_payload(cfg, 0, 1, 2, idx[:0], vals[:0], 64)
+        assert len(i0) == 0 and len(v0) == 0
+
+    def test_alie_payload_shape_norm_and_support(self):
+        cfg = F.FaultConfig(byzantine_frac=0.1, attack="alie", alie_z=1.0)
+        rng = RNG.stream(0, RNG.KIND_FAULTS, 11)
+        rows = rng.normal(0.5, 1.0, (6, 100))
+        out = F.alie_payload(cfg, rows.sum(0), (rows ** 2).sum(0),
+                             6, 12, norm_target=2.5)
+        assert out is not None
+        idx, vals = out
+        assert len(idx) == len(vals) == 12
+        np.testing.assert_array_equal(idx, np.sort(idx))
+        assert np.linalg.norm(vals) == pytest.approx(2.5, rel=1e-5)
+        # the payload really is μ − z·σ at the kept coordinates
+        mu = rows.sum(0) / 6
+        var = np.maximum((rows ** 2).sum(0) / 6 - mu * mu, 0.0)
+        full = mu - 1.0 * np.sqrt(var)
+        scaled = full[idx] * (2.5 / np.linalg.norm(full[idx]))
+        np.testing.assert_allclose(vals, scaled, rtol=1e-5)
+
+    def test_alie_payload_none_without_honest_stats(self):
+        cfg = F.FaultConfig(byzantine_frac=0.1, attack="alie")
+        z = np.zeros(10)
+        assert F.alie_payload(cfg, z, z, 0, 5, 1.0) is None
+        assert F.alie_payload(cfg, z, z, 4, 0, 1.0) is None
+
+    def test_alie_attack_payload_shares_and_falls_back(self):
+        cfg = F.FaultConfig(byzantine_frac=0.1, attack="alie",
+                            attack_scale=10.0)
+        idx = np.array([1, 3], np.int32)
+        vals = np.array([2.0, -1.0], np.float32)
+        shared = (np.array([5, 9], np.int32),
+                  np.array([0.5, 0.5], np.float32))
+        i, v = F.attack_payload(cfg, 0, 1, 2, idx, vals, 64, alie=shared)
+        assert i is shared[0] and v is shared[1]
+        # no honest statistics this round ⇒ sign_flip on the honest payload
+        i2, v2 = F.attack_payload(cfg, 0, 1, 2, idx, vals, 64, alie=None)
+        np.testing.assert_array_equal(i2, idx)
+        np.testing.assert_allclose(v2, -10.0 * vals)
+
+    def test_flip_bit_flips_exactly_one_and_handles_empty(self):
+        payload = bytes(range(32))
+        bad = F.flip_bit(payload, 0, 3, 7)
+        assert F.flip_bit(payload, 0, 3, 7) == bad    # deterministic
+        diff = np.frombuffer(payload, np.uint8) ^ np.frombuffer(bad,
+                                                                np.uint8)
+        assert int(np.unpackbits(diff).sum()) == 1
+        assert F.flip_bit(payload, 0, 3, 7, salt=1) != bad
+        # satellite fix: empty payload passes through instead of crashing
+        assert F.flip_bit(b"", 0, 3, 7) == b""
+
+
+class TestDeferredLedgerEdges:
+    DEFER = dict(straggler_deadline=1.01, late_policy="defer")
+
+    def test_defer_chains_across_consecutive_rounds(self):
+        """A client can be LATE in round t (upload deferred to t+1) and
+        LATE again in round t+1 — the fresh deferral must not clobber or
+        double-fold the arriving one."""
+        fc = F.FaultConfig(**self.DEFER)
+        sim = Simulator(_cfg(wire="loopback", faults=fc, rounds=8,
+                             participation=0.75, seed=5))
+        sim.run()
+        d_out = [e["n_deferred_out"] for e in sim.fault_log]
+        d_in = [e["n_deferred_in"] for e in sim.fault_log]
+        assert d_in[1:] == d_out[:-1] and d_in[0] == 0
+        chained = False
+        for a, b in zip(sim.fault_log, sim.fault_log[1:]):
+            late_a = set(a["parts"][a["status"] == F.LATE].tolist())
+            late_b = set(b["parts"][b["status"] == F.LATE].tolist())
+            if late_a & late_b:
+                chained = True
+        assert chained, "seed produced no chained defer; pick another"
+
+    def test_deferred_upload_from_evicted_client(self):
+        """The deferred ledger stores the payload by value — folding it
+        next round must not require the client's state-store row, which a
+        capacity-bounded store may have evicted in between."""
+        fc = F.FaultConfig(**self.DEFER)
+        sim = Simulator(_cfg(wire="loopback", faults=fc, rounds=8,
+                             participation=0.75, state_capacity=9,
+                             seed=5))
+        h = sim.run()
+        assert sum(e["n_deferred_in"] for e in sim.fault_log) > 0
+        assert np.isfinite(h.accuracy[-1])
+        assert np.isfinite(np.asarray(sim.global_flat)).all()
+
+    def test_checkpoint_with_nonempty_ledger_under_availability(self):
+        """Snapshot taken BETWEEN a defer and its arrival, with diurnal
+        availability active: the ledger payload crosses the checkpoint
+        boundary and the resumed run replays both the availability mask
+        and the deferred fold bit-identically."""
+        av = AvailabilityConfig(kind="diurnal", day_rounds=4, duty=0.6,
+                                flake_rate=0.05)
+        fc = F.FaultConfig(**self.DEFER)
+        kw = dict(wire="loopback", faults=fc, availability=av,
+                  participation=0.75, rounds=8, seed=5)
+        ref = Simulator(_cfg(**kw))
+        ref.run()
+        # find a snapshot round with a live deferral crossing it
+        cut = next(t + 1 for t, e in enumerate(ref.fault_log)
+                   if e["n_deferred_out"] > 0 and t + 1 < 8)
+
+        first = Simulator(_cfg(**{**kw, "rounds": cut}))
+        first.run()
+        snap = first.state_dict()
+        assert len(snap["deferred"]) > 0
+
+        resumed = Simulator(_cfg(**kw))
+        resumed.load_state_dict(snap)
+        resumed.run(start_round=cut + 1)
+
+        np.testing.assert_array_equal(np.asarray(resumed.global_flat),
+                                      np.asarray(ref.global_flat))
+        assert len(resumed.avail_log) == len(ref.avail_log) == 8
+        for a, b in zip(resumed.avail_log, ref.avail_log):
+            assert a == b
+        for a, b in zip(resumed.fault_log, ref.fault_log):
+            np.testing.assert_array_equal(a["parts"], b["parts"])
+            np.testing.assert_array_equal(a["status"], b["status"])
+            assert a["n_deferred_in"] == b["n_deferred_in"]
 
 
 class TestCheckpointUnderFaults:

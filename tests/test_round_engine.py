@@ -237,7 +237,7 @@ class TestExecutorMarshalling:
     def test_group_ungroup_roundtrip(self):
         sim = Simulator(_cfg(chunk_size=4))
         ex = sim.executor
-        parts = sim._select_participants(sim._round_rng(1))
+        parts, _, _ = sim._select_participants(sim._round_rng(1), 1)
         order = np.argsort(parts // ex.rows_per_shard, kind="stable")
         vals = np.arange(len(parts), dtype=np.float32) * 1.5
         grouped = ex._group(vals, order, np.float32(-1.0))
